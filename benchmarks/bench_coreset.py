@@ -1,0 +1,47 @@
+"""§5 communication/approximation tradeoff: coreset size vs quality.
+
+Algorithm 1 ships k centers per worker; Algorithm 2 ships an m-point coreset
+(m > k) for better downstream quality at higher communication.  Derived:
+coreset cost-estimation error and bytes shipped per worker."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering_cost, sensitivity_coreset, uniform_coreset
+from repro.data.synthetic import gaussian_mixture
+
+from .common import emit, timed
+
+
+def run(seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    pts, _, _ = gaussian_mixture(4000, 8, 6, rng=rng)
+    x = jnp.asarray(pts)
+    d = pts.shape[1]
+    probes = [jnp.asarray(rng.normal(size=(8, d)), jnp.float32) for _ in range(5)]
+    full = [float(clustering_cost(x, C)) for C in probes]
+
+    for m in (64, 128, 256, 512, 1024):
+        for kind, fn in (("sens", sensitivity_coreset), ("unif", uniform_coreset)):
+            if kind == "sens":
+                us, cs = timed(
+                    lambda m=m: fn(jax.random.PRNGKey(1), x, k=8, m=m), iters=1
+                )
+            else:
+                us, cs = timed(lambda m=m: fn(jax.random.PRNGKey(1), x, m), iters=1)
+            errs = [
+                abs(float(clustering_cost(cs.points, C, weights=cs.weights)) - f) / f
+                for C, f in zip(probes, full)
+            ]
+            bytes_ = m * (d + 1) * 4
+            emit(
+                f"coreset_{kind}_m{m}", us,
+                f"mean_err={np.mean(errs):.4f} max_err={np.max(errs):.4f} bytes={bytes_}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On CPU the interpret-mode kernel is expected to be SLOWER than the fused XLA
+oracle — the deliverable here is the us_per_call bookkeeping + the allclose
+check; TPU timing happens on real hardware with the same entry points."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.pairwise_dist import kernel as pd_kernel
+from repro.kernels.pairwise_dist import ref as pd_ref
+from repro.kernels.weighted_segsum import kernel as ss_kernel
+from repro.kernels.weighted_segsum import ref as ss_ref
+
+from .common import emit, timed
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1024, 32)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+
+    us_ref, d_ref = timed(jax.jit(pd_ref.pairwise_sqdist_ref), x, c, iters=5)
+    emit("pairwise_ref", us_ref, "oracle")
+    us_k, d_k = timed(
+        lambda: pd_kernel.pairwise_sqdist_kernel_call(x, c, bn=256, bk=128), iters=2
+    )
+    err = float(jnp.max(jnp.abs(d_k - d_ref)))
+    emit("pairwise_pallas_interpret", us_k, f"max_err={err:.2e}")
+
+    w = jnp.asarray(rng.random(1024), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 128, 1024), jnp.int32)
+    us_ref, s_ref = timed(
+        jax.jit(ss_ref.weighted_segsum_ref, static_argnames=("k",)), x, w, idx, k=128, iters=5
+    )
+    emit("segsum_ref", us_ref, "oracle")
+    us_k, s_k = timed(
+        lambda: ss_kernel.weighted_segsum_kernel_call(x, w, idx, 128, bn=256), iters=2
+    )
+    err = float(jnp.max(jnp.abs(s_k[0] - s_ref[0])))
+    emit("segsum_pallas_interpret", us_k, f"max_err={err:.2e}")
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us_ref, o_ref = timed(
+        lambda: fa_ops.flash_attention(q, k, v, causal=True, impl="ref"), iters=3
+    )
+    emit("attention_ref", us_ref, "oracle")
+    us_c, o_c = timed(
+        lambda: fa_ops.flash_attention(q, k, v, causal=True, impl="chunked"), iters=3
+    )
+    emit("attention_chunked", us_c, f"max_err={float(jnp.max(jnp.abs(o_c - o_ref))):.2e}")
+    us_p, o_p = timed(
+        lambda: fa_ops.flash_attention(q, k, v, causal=True, impl="pallas"), iters=1
+    )
+    emit("attention_pallas_interpret", us_p, f"max_err={float(jnp.max(jnp.abs(o_p - o_ref))):.2e}")
+
+
+if __name__ == "__main__":
+    run()

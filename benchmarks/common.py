@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timed(fn: Callable, *args, iters: int = 3, warmup: int = 1, **kw) -> tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else out
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        if isinstance(out, jax.Array):
+            out.block_until_ready()
+        else:
+            jax.tree_util.tree_map(
+                lambda x: x.block_until_ready() if isinstance(x, jax.Array) else x, out
+            )
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return us, out
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

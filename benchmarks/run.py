@@ -1,0 +1,67 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline numbers come from the
+dry-run artifacts (results/dryrun.jsonl via launch.dryrun), summarized here
+when present.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig1 kernels
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from . import bench_approx, bench_assignment, bench_coreset, bench_fig1, bench_kernels, bench_training
+from .common import emit
+
+BENCHES = {
+    "fig1": bench_fig1.run,
+    "assignment": bench_assignment.run,
+    "approx": bench_approx.run,
+    "coreset": bench_coreset.run,
+    "training": bench_training.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def summarize_dryrun(path: str = "results/dryrun.jsonl") -> None:
+    if not os.path.exists(path):
+        return
+    best: dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "roofline" not in d:
+                continue
+            best[(d["arch"], d["shape"], d["mesh"])] = d  # last write wins
+    for (arch, shape, mesh), d in sorted(best.items()):
+        r = d["roofline"]
+        emit(
+            f"roofline_{arch}_{shape}_{mesh}",
+            d.get("compile_s", 0.0) * 1e6,
+            f"dom={r['dominant']} compute_ms={r['compute_s']*1e3:.2f} "
+            f"memory_ms={r['memory_s']*1e3:.2f} coll_ms={r['collective_s']*1e3:.2f} "
+            f"roofline_frac={r['roofline_fraction']:.3f}",
+        )
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        if n == "dryrun":
+            summarize_dryrun()
+            continue
+        BENCHES[n]()
+    if not sys.argv[1:]:
+        summarize_dryrun()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Algorithm 3: straggler-resilient distributed PCA via relaxed coresets.
+
+Shows the (1+4δ) guarantee live: workers SVD their shard, ship r₁ = r+⌈r/δ⌉−1
+sketch rows, the coordinator reweights by √b and re-SVDs — while t of s
+workers straggle.
+
+    PYTHONPATH=src python examples/distributed_pca.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    bernoulli_assignment,
+    centralized_pca,
+    fixed_count_stragglers,
+    pca_cost,
+    resilient_pca,
+)
+from repro.data.synthetic import planted_subspaces
+
+
+def main() -> None:
+    n, d, r, s, t = 2000, 64, 5, 12, 4
+    X, _ = planted_subspaces(n, 1, d, r, noise=0.05, rng=np.random.default_rng(0))
+    X = X - X.mean(0, keepdims=True)
+    opt_basis = centralized_pca(jnp.asarray(X), r)
+    opt = float(pca_cost(jnp.asarray(X), opt_basis))
+    print(f"n={n} d={d} r={r}; s={s} workers, t={t} stragglers")
+    print(f"centralized r-PCA residual: {opt:.3f}\n")
+    print(f"{'delta':>6} {'r1':>4} {'rows sent':>9} {'residual':>10} {'factor':>7} {'bound':>7}")
+    rng = np.random.default_rng(1)
+    alive = fixed_count_stragglers(s, t, rng)
+    for delta in (1.0, 0.5, 0.25, 0.1):
+        a = bernoulli_assignment(n, s, ell=8.0, rng=np.random.default_rng(2))
+        out = resilient_pca(X, r, delta, a, alive)
+        print(
+            f"{delta:6.2f} {out.r1:4d} {out.sketch_rows:9d} {out.cost:10.3f} "
+            f"{out.cost / opt:7.4f} {1 + 4 * delta:7.2f}"
+        )
+    print(
+        "\nSmaller δ → larger sketches (r1 rows/worker) → tighter factor;"
+        "\nevery row stays within the Theorem-5 band despite the stragglers."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Quickstart: the paper's Figure-1 experiment, end to end.
+
+n=5000 2-D Gaussian points (Fränti S1-style), s=10 workers, t=3 stragglers,
+k=15 medians.  Compares:
+  1. centralized k-median                      (reference)
+  2. ignore-stragglers, non-redundant split    (paper Fig 1b — collapses)
+  3. Algorithm 1, Bernoulli p_a=0.1            (Fig 1c)
+  4. Algorithm 1, Bernoulli p_a=0.2            (Fig 1d — near ground truth)
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    bernoulli_assignment,
+    fixed_count_stragglers,
+    ignore_stragglers_kmedian,
+    lloyd,
+    node_loads,
+    resilient_kmedian,
+    singleton_assignment,
+)
+from repro.data.synthetic import franti_s1_like
+
+
+def main() -> None:
+    n, s, t, k = 5000, 10, 3, 15
+    pts, truth_centers, _ = franti_s1_like(n)
+    rng = np.random.default_rng(0)
+    alive = fixed_count_stragglers(s, t, rng)
+    print(f"dataset: n={n} d=2 k={k};  workers s={s}, stragglers t={t}")
+    print(f"straggling workers: {sorted(np.flatnonzero(~alive).tolist())}\n")
+
+    central = lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), k, iters=40, median=True)
+    ref = float(central.cost)
+    print(f"[1] centralized k-median                cost={ref:9.1f}  ratio=1.000")
+
+    ign = ignore_stragglers_kmedian(
+        pts, k, singleton_assignment(n, s), alive, local_iters=15, coord_iters=30
+    )
+    print(
+        f"[2] ignore stragglers (no redundancy)   cost={ign.cost:9.1f}  "
+        f"ratio={ign.cost / ref:5.3f}   <-- quality collapse"
+    )
+
+    for tag, p_a in (("[3]", 0.1), ("[4]", 0.2)):
+        a = bernoulli_assignment(n, s, ell=p_a * s, rng=np.random.default_rng(1))
+        out = resilient_kmedian(pts, k, a, alive, local_iters=15, coord_iters=30)
+        print(
+            f"{tag} Algorithm 1, p_a={p_a}              cost={out.cost:9.1f}  "
+            f"ratio={out.cost / ref:5.3f}   load/machine={node_loads(a).mean():.0f}  "
+            f"delta={out.recovery.delta:.2f}"
+        )
+
+    print(
+        "\nTakeaway: redundancy (p_a 0.1 → 0.2) buys straggler resilience — the"
+        "\npaper's Fig 1(d): resilient cost approaches the centralized reference."
+    )
+
+
+if __name__ == "__main__":
+    main()

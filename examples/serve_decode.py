@@ -1,0 +1,49 @@
+"""Batched serving demo: prefill + token-by-token decode with a KV cache,
+on a reduced qwen3-style model, plus the recurrent-state decode path of the
+xLSTM family (no KV cache at all).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.qwen3_4b import smoke_config as qwen_smoke
+from repro.configs.xlstm_1_3b import smoke_config as xlstm_smoke
+from repro.models import transformer as T
+from repro.serve.decode import greedy_generate
+
+
+def demo(name: str, cfg, B: int = 4, prompt_len: int = 16, gen: int = 24) -> None:
+    cfg = cfg.validate()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    if cfg.num_codebooks > 0:
+        prompt = jax.random.randint(key, (B, cfg.num_codebooks, prompt_len), 0, cfg.vocab)
+    else:
+        prompt = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = greedy_generate(params, cfg, prompt, steps=gen, temperature=0.8)
+    dt = time.perf_counter() - t0
+    print(
+        f"{name:12s} batch={B} prompt={prompt_len} generated={gen} "
+        f"({B * gen / dt:.1f} tok/s incl. compile)"
+    )
+    print(f"  sample row 0: {out[0].tolist()}")
+
+
+def main() -> None:
+    print("Serving demo — batched greedy/temperature decode\n")
+    demo("qwen3-smoke", qwen_smoke())
+    demo("xlstm-smoke", xlstm_smoke())
+    print("\nxLSTM decodes from an O(1)-size recurrent state — no KV cache;")
+    print("that is what makes the 524k-token long_500k dry-run cell feasible.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end driver: train a qwen3-family LM with straggler-resilient
+redundant data assignment, deadline straggling, checkpoint/restart and
+gradient compression — the paper's technique as a first-class training
+feature.
+
+    PYTHONPATH=src python examples/train_resilient_lm.py                 # smoke (~2M params)
+    PYTHONPATH=src python examples/train_resilient_lm.py --preset 100m   # ~100M params (real machine)
+    PYTHONPATH=src python examples/train_resilient_lm.py --resume        # restart from checkpoint
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.qwen3_4b import config as qwen3_4b_config
+from repro.models.registry import ModelConfig
+from repro.train.compression import CompressionConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def preset(name: str) -> tuple[ModelConfig, TrainerConfig, AdamWConfig]:
+    base = qwen3_4b_config()
+    if name == "smoke":
+        cfg = dataclasses.replace(
+            base, vocab=512, d_model=128, n_layers=4, n_heads=4, n_kv_heads=2,
+            d_ff=384, head_dim=32,
+        )
+        tcfg = TrainerConfig(
+            num_groups=4, num_shards=4, redundancy=2, scheme="cyclic",
+            microbatch=2, seq_len=128, steps=150, ckpt_every=50,
+            ckpt_dir="/tmp/repro_ckpt_smoke", simulate_stragglers=True,
+            compression=CompressionConfig(block=256),
+        )
+        ocfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=150)
+    elif name == "100m":
+        # ~100M params: 12L, d=768, dff=3072, vocab 32k.
+        cfg = dataclasses.replace(
+            base, vocab=32768, d_model=768, n_layers=12, n_heads=12,
+            n_kv_heads=4, d_ff=3072, head_dim=64,
+        )
+        tcfg = TrainerConfig(
+            num_groups=8, num_shards=8, redundancy=2, scheme="cyclic",
+            microbatch=4, seq_len=1024, steps=300, ckpt_every=50,
+            ckpt_dir="/tmp/repro_ckpt_100m", simulate_stragglers=True,
+            compression=CompressionConfig(block=256),
+        )
+        ocfg = AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=300)
+    else:
+        raise SystemExit(f"unknown preset {name}")
+    return cfg.validate(), tcfg, ocfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=("smoke", "100m"))
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    cfg, tcfg, ocfg = preset(args.preset)
+    if args.steps:
+        tcfg = dataclasses.replace(tcfg, steps=args.steps)
+        ocfg = dataclasses.replace(ocfg, total_steps=args.steps)
+    if not args.resume:
+        import shutil
+
+        shutil.rmtree(tcfg.ckpt_dir, ignore_errors=True)
+
+    print(
+        f"preset={args.preset}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab} | "
+        f"G={tcfg.num_groups} groups, ell={tcfg.redundancy} ({tcfg.scheme}), "
+        f"{tcfg.steps} steps, ckpt every {tcfg.ckpt_every} -> {tcfg.ckpt_dir}"
+    )
+    trainer = Trainer(cfg, tcfg, ocfg)
+
+    def on_step(step, rec):
+        if step % 10 == 0 or rec["stragglers"]:
+            print(
+                f"step {step:4d}  loss={rec['loss']:.4f}  gnorm={rec['grad_norm']:.2f}  "
+                f"stragglers={rec['stragglers']}  delta={rec['delta']:.3f}  "
+                f"covered={rec['covered']:.2f}"
+            )
+
+    trainer.run(on_step=on_step)
+    losses = [h["loss"] for h in trainer.history if "loss" in h]
+    straggled_steps = sum(1 for h in trainer.history if h.get("stragglers", 0) > 0)
+    print(
+        f"\ndone: loss {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps; "
+        f"{straggled_steps} steps had stragglers and still contributed via recovery weights."
+    )
+
+
+if __name__ == "__main__":
+    main()

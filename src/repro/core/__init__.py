@@ -1,0 +1,55 @@
+"""Core contribution of the paper: redundant data assignment, recovery
+vectors, and straggler-resilient clustering algorithms (Algorithms 1–3)."""
+
+from .assignment import (  # noqa: F401
+    Assignment,
+    bernoulli_assignment,
+    cyclic_assignment,
+    fractional_repetition_assignment,
+    min_cover_after_stragglers,
+    node_loads,
+    satisfies_property1,
+    shard_replication,
+    singleton_assignment,
+    theorem6_ell,
+)
+from .recovery import (  # noqa: F401
+    RecoveryResult,
+    jax_recovery,
+    lp_recovery,
+    nnls_recovery,
+    solve_recovery,
+    uniform_recovery,
+)
+from .stragglers import (  # noqa: F401
+    DeadlineStragglerSimulator,
+    adversarial_stragglers,
+    fixed_count_stragglers,
+    random_stragglers,
+)
+from .aggregation import (  # noqa: F401
+    mom_combine,
+    resilient_psum,
+    resilient_sum,
+    weighted_union,
+)
+from .kmeans import ClusteringResult, clustering_cost, lloyd, plusplus_init  # noqa: F401
+from .kmedian import (  # noqa: F401
+    ResilientClusteringOutput,
+    ignore_stragglers_kmedian,
+    resilient_kmedian,
+)
+from .coreset import Coreset, sensitivity_coreset, uniform_coreset  # noqa: F401
+from .subspace import (  # noqa: F401
+    ResilientSubspaceOutput,
+    lloyd_subspace,
+    resilient_subspace_clustering,
+    subspace_cost,
+)
+from .pca import (  # noqa: F401
+    ResilientPCAOutput,
+    centralized_pca,
+    pca_cost,
+    relaxed_coreset_rank,
+    resilient_pca,
+)

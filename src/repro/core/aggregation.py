@@ -1,0 +1,96 @@
+"""Recovery-weighted combining (Lemma 3) — the universal primitive.
+
+Lemma 3 states that for an assignment with Property 1 and recovery vector
+``b``, any additively-decomposable statistic ``F(P) = Σ_{p∈P} f(p)`` obeys
+
+    F(P) ≤ Σ_{i∈R} b_i · F(P_i) ≤ (1+δ)·F(P)     (coordinate-wise for f ≥ 0,
+                                                   exact band for any f when
+                                                   the achieved a ≡ 1).
+
+:func:`resilient_sum` applies the combine host-side to stacked per-node
+statistics; :func:`resilient_psum` is the SPMD in-graph form (a weighted
+``psum`` over a mesh axis); :func:`mom_combine` is a byzantine-robust
+median-of-means alternative (paper §5 future-work direction).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["resilient_sum", "resilient_psum", "mom_combine", "weighted_union"]
+
+
+def resilient_sum(per_node_stats: Any, b_full: np.ndarray) -> Any:
+    """``Σ_i b_i · stat_i`` over a pytree whose leaves are stacked on axis 0.
+
+    ``b_full`` has one weight per node (zero for stragglers), so straggler
+    contributions vanish regardless of their (stale/garbage) content.
+    """
+    b = jnp.asarray(b_full)
+
+    def combine(leaf):
+        leaf = jnp.asarray(leaf)
+        w = b.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree_util.tree_map(combine, per_node_stats)
+
+
+def resilient_psum(x: Any, my_weight, axis_name: str) -> Any:
+    """In-SPMD Lemma-3 combine: ``psum_i(b_i · x_i)`` over ``axis_name``.
+
+    ``my_weight`` is this shard's recovery weight (a scalar traced value,
+    typically sliced from a replicated ``(groups,)`` input by group index).
+    Straggling shards contribute with weight 0 — the collective itself always
+    runs (SPMD adaptation; see DESIGN.md §4.2).
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.lax.psum(leaf * jnp.asarray(my_weight, leaf.dtype), axis_name), x
+    )
+
+
+def mom_combine(per_node_stats: Any, num_groups: int = 5) -> Any:
+    """Median-of-means combine (byzantine-robust aggregator, beyond paper).
+
+    Splits the node axis into ``num_groups`` buckets, averages within buckets,
+    takes the coordinate-wise median across buckets.  Robust to a minority of
+    arbitrarily-corrupted node statistics at the cost of the δ guarantee.
+    """
+
+    def combine(leaf):
+        leaf = jnp.asarray(leaf)
+        s = leaf.shape[0]
+        g = max(1, min(num_groups, s))
+        usable = (s // g) * g
+        grouped = leaf[:usable].reshape((g, s // g) + leaf.shape[1:])
+        return jnp.median(jnp.mean(grouped, axis=1), axis=0) * s
+
+    return jax.tree_util.tree_map(combine, per_node_stats)
+
+
+def weighted_union(
+    point_sets: Sequence[np.ndarray],
+    weight_sets: Sequence[np.ndarray],
+    b: np.ndarray,
+    alive: Optional[np.ndarray] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Union of per-node weighted point sets with Lemma-3 reweighting.
+
+    Used by Algorithms 1/2/3: node ``i`` contributes points ``point_sets[i]``
+    with weights ``b_i · weight_sets[i]``.  ``alive`` selects contributing
+    nodes (stragglers dropped).  Returns (points (m, d), weights (m,)).
+    """
+    pts, wts = [], []
+    idx = range(len(point_sets)) if alive is None else np.flatnonzero(np.asarray(alive))
+    for i in idx:
+        if b[i] == 0.0 or len(point_sets[i]) == 0:
+            continue
+        pts.append(np.asarray(point_sets[i]))
+        wts.append(float(b[i]) * np.asarray(weight_sets[i], dtype=np.float64))
+    if not pts:
+        raise ValueError("no surviving nodes with data — cannot form union")
+    return np.concatenate(pts, axis=0), np.concatenate(wts, axis=0)

@@ -1,0 +1,174 @@
+"""Algorithm 1 — straggler-resilient distributed k-median (paper §3.2).
+
+Pipeline (exactly the paper's):
+
+1. Allocate ``P`` to ``s`` workers by an assignment with Property 1.
+2. Each worker solves weighted k-median on its local shard; the centers
+   ``Y_i`` are weighted by their (weighted) cluster sizes ``w_i``.
+3. The coordinator collects ``{(Y_i, w_i)}`` from the alive set ``R``,
+   reweights by the recovery vector (``w(c) = b_i·w_i(c)``), and solves
+   weighted k-median on the union.  Theorem 3: cost ≤ 3(1+δ)·OPT.
+
+TPU adaptation: workers are *simulated as a vmapped batch* over padded local
+shards (one compiled program regardless of node count / load skew — the real
+deployment maps the same code over mesh rows, see repro.launch).  The
+coordinator step is host-side numpy orchestration around the same jitted
+Lloyd solver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans
+from .aggregation import weighted_union
+from .assignment import Assignment
+from .recovery import RecoveryResult, solve_recovery
+
+__all__ = [
+    "pack_local_shards",
+    "local_cluster_batch",
+    "resilient_kmedian",
+    "ignore_stragglers_kmedian",
+    "ResilientClusteringOutput",
+]
+
+
+@dataclasses.dataclass
+class ResilientClusteringOutput:
+    centers: np.ndarray          # (k, d) final coordinator centers
+    cost: float                  # cost(P, centers) on the FULL dataset
+    recovery: RecoveryResult     # the b used (diagnostics: δ, coverage)
+    summary_points: np.ndarray   # the coordinator's weighted input Y
+    summary_weights: np.ndarray
+
+
+def pack_local_shards(
+    points: np.ndarray, assignment: Assignment
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-node shards to the max load: (s, m, d) data + (s, m) weights.
+
+    Padding rows are zeros with weight 0 — inert in every weighted statistic.
+    """
+    s = assignment.num_nodes
+    loads = [assignment.shards_of(i) for i in range(s)]
+    m = max((len(l) for l in loads), default=1) or 1
+    d = points.shape[1]
+    xs = np.zeros((s, m, d), dtype=np.float32)
+    ws = np.zeros((s, m), dtype=np.float32)
+    for i, l in enumerate(loads):
+        xs[i, : len(l)] = points[l]
+        ws[i, : len(l)] = 1.0
+    return xs, ws
+
+
+def local_cluster_batch(key, xs, ws, k: int, *, iters: int = 20, median: bool = True):
+    """All workers' local clustering as one vmapped program.
+
+    Returns (centers (s, k, d), center_weights (s, k)) where center weights
+    are the weighted local cluster sizes (the paper's ``w_i(c)``).
+    """
+    s = xs.shape[0]
+    keys = jax.random.split(key, s)
+
+    def one(key, x, w):
+        res = kmeans.lloyd(key, x, k, weights=w, iters=iters, median=median)
+        from ..kernels.weighted_segsum import ops as ss
+
+        _, tot = ss.weighted_segsum(x, w, res.assignment, k)
+        return res.centers, tot
+
+    return jax.vmap(one)(keys, jnp.asarray(xs), jnp.asarray(ws))
+
+
+def resilient_kmedian(
+    points: np.ndarray,
+    k: int,
+    assignment: Assignment,
+    alive: np.ndarray,
+    *,
+    recovery_method: str = "auto",
+    local_iters: int = 20,
+    coord_iters: int = 40,
+    seed: int = 0,
+) -> ResilientClusteringOutput:
+    """Paper Algorithm 1, end-to-end."""
+    points = np.asarray(points, dtype=np.float32)
+    alive = np.asarray(alive, dtype=bool)
+    rec = solve_recovery(assignment, alive, method=recovery_method)
+
+    xs, ws = pack_local_shards(points, assignment)
+    key = jax.random.PRNGKey(seed)
+    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters)
+    centers_s = np.asarray(centers_s)
+    wts_s = np.asarray(wts_s)
+
+    # Coordinator: b-weighted union of alive workers' centers (Lemma 3).
+    y, wy = weighted_union(
+        [centers_s[i] for i in range(assignment.num_nodes)],
+        [wts_s[i] for i in range(assignment.num_nodes)],
+        rec.b_full,
+        alive=alive,
+    )
+    coord_key = jax.random.PRNGKey(seed + 1)
+    res = kmeans.lloyd(
+        coord_key, jnp.asarray(y), k, weights=jnp.asarray(wy),
+        iters=coord_iters, median=True,
+    )
+    centers = np.asarray(res.centers)
+    full_cost = float(
+        kmeans.clustering_cost(jnp.asarray(points), jnp.asarray(centers), median=True)
+    )
+    return ResilientClusteringOutput(
+        centers=centers, cost=full_cost, recovery=rec,
+        summary_points=y, summary_weights=wy,
+    )
+
+
+def ignore_stragglers_kmedian(
+    points: np.ndarray,
+    k: int,
+    assignment: Assignment,
+    alive: np.ndarray,
+    *,
+    local_iters: int = 20,
+    coord_iters: int = 40,
+    seed: int = 0,
+) -> ResilientClusteringOutput:
+    """The paper's Fig 1(b) baseline: no recovery weighting — alive workers'
+    centers are combined as-is (b ≡ 1).  With a non-redundant assignment this
+    silently drops the stragglers' data."""
+    points = np.asarray(points, dtype=np.float32)
+    alive = np.asarray(alive, dtype=bool)
+    xs, ws = pack_local_shards(points, assignment)
+    key = jax.random.PRNGKey(seed)
+    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters)
+    centers_s = np.asarray(centers_s)
+    wts_s = np.asarray(wts_s)
+    ones = np.ones(assignment.num_nodes)
+    y, wy = weighted_union(
+        [centers_s[i] for i in range(assignment.num_nodes)],
+        [wts_s[i] for i in range(assignment.num_nodes)],
+        ones,
+        alive=alive,
+    )
+    res = kmeans.lloyd(
+        jax.random.PRNGKey(seed + 1), jnp.asarray(y), k,
+        weights=jnp.asarray(wy), iters=coord_iters, median=True,
+    )
+    centers = np.asarray(res.centers)
+    full_cost = float(
+        kmeans.clustering_cost(jnp.asarray(points), jnp.asarray(centers), median=True)
+    )
+    from .recovery import lp_recovery
+
+    rec = lp_recovery(assignment, alive)
+    return ResilientClusteringOutput(
+        centers=centers, cost=full_cost, recovery=rec,
+        summary_points=y, summary_weights=wy,
+    )

@@ -1,0 +1,110 @@
+"""Algorithm 3 — straggler-resilient distributed r-PCA via relaxed coresets
+(paper §3.3.2, following Feldman–Schmidt–Sohler / Balcan et al.).
+
+Each worker computes a local SVD ``P_i = U_i Σ_i V_iᵀ`` and sends the relaxed
+coreset ``S_i = Σ_i^{(r₁)} V_iᵀ`` (only the top ``r₁ = r + ⌈r/δ⌉ − 1`` rows
+are non-zero, so the message is ``r₁·d`` — independent of both n and d of
+the guarantee).  The coordinator stacks ``√b_i · S_i`` (the b-weighting of
+Lemma 5 enters as √b since the cost is squared) and returns the top-r right
+singular subspace.  Theorem 5: cost(P, L̂) ≤ (1+4δ)·cost(P, L*).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .assignment import Assignment
+from .kmedian import pack_local_shards
+from .recovery import RecoveryResult, solve_recovery
+
+__all__ = [
+    "relaxed_coreset_rank",
+    "local_relaxed_coresets",
+    "resilient_pca",
+    "centralized_pca",
+    "pca_cost",
+    "ResilientPCAOutput",
+]
+
+
+def relaxed_coreset_rank(r: int, delta: float) -> int:
+    """r₁ = r + ⌈r/δ⌉ − 1 (paper Algorithm 3, step 4)."""
+    return r + max(1, math.ceil(r / delta)) - 1
+
+
+def local_relaxed_coresets(xs, r1: int):
+    """Vmapped local sketches: (s, m, d) → (s, r1, d) = Σ^{(r₁)} Vᵀ rows.
+
+    Padding rows are zeros → they only add zero singular values; harmless.
+    """
+
+    def one(x):
+        # economy SVD; we need top-r1 right singular vectors and values.
+        _, sv, vt = jnp.linalg.svd(x, full_matrices=False)
+        r1c = min(r1, vt.shape[0])
+        sketch = sv[:r1c, None] * vt[:r1c]
+        if r1c < r1:  # static branch: pad to the declared sketch size
+            sketch = jnp.pad(sketch, ((0, r1 - r1c), (0, 0)))
+        return sketch
+
+    return jax.vmap(one)(xs)
+
+
+def pca_cost(x, basis):
+    """‖P − P·V·Vᵀ‖²_F for an orthonormal (d, r) basis V."""
+    x = jnp.asarray(x, jnp.float32)
+    proj = x @ basis
+    return jnp.sum(x * x) - jnp.sum(proj * proj)
+
+
+def centralized_pca(x, r: int):
+    """Exact top-r right singular subspace of the full matrix (baseline)."""
+    _, _, vt = jnp.linalg.svd(jnp.asarray(x, jnp.float32), full_matrices=False)
+    return vt[:r].T  # (d, r)
+
+
+@dataclasses.dataclass
+class ResilientPCAOutput:
+    basis: np.ndarray  # (d, r)
+    cost: float  # cost(P, L̂) on the full dataset
+    r1: int
+    recovery: RecoveryResult
+    sketch_rows: int  # total coordinator input rows (communication proxy)
+
+
+def resilient_pca(
+    points: np.ndarray,
+    r: int,
+    delta: float,
+    assignment: Assignment,
+    alive: np.ndarray,
+    *,
+    recovery_method: str = "auto",
+) -> ResilientPCAOutput:
+    """Paper Algorithm 3, end-to-end."""
+    points = np.asarray(points, dtype=np.float32)
+    alive = np.asarray(alive, dtype=bool)
+    rec = solve_recovery(assignment, alive, method=recovery_method)
+    r1 = relaxed_coreset_rank(r, delta)
+
+    xs, _ = pack_local_shards(points, assignment)
+    sketches = np.asarray(local_relaxed_coresets(jnp.asarray(xs), r1))  # (s, r1, d)
+
+    rows = []
+    for i in np.flatnonzero(alive):
+        if rec.b_full[i] > 0:
+            rows.append(math.sqrt(rec.b_full[i]) * sketches[i])
+    if not rows:
+        raise ValueError("no surviving workers — PCA impossible")
+    y = np.concatenate(rows, axis=0)  # (|R|·r1, d)
+    basis = centralized_pca(jnp.asarray(y), r)
+    cost = float(pca_cost(jnp.asarray(points), basis))
+    return ResilientPCAOutput(
+        basis=np.asarray(basis), cost=cost, r1=r1, recovery=rec, sketch_rows=y.shape[0]
+    )

@@ -1,0 +1,102 @@
+"""Straggler models (paper §3.4 random model + systems-grade extensions).
+
+The paper analyses the *random straggler model*: each node straggles
+independently with probability ``p_t``.  Real clusters also exhibit
+correlated slowdowns and adversarial worst cases, and at the training-loop
+level straggling is *deadline-based* (a node that misses the step deadline is
+treated as failed for that step).  All are modelled here; every model yields
+a boolean alive-mask consumed by :mod:`repro.core.recovery`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .assignment import Assignment
+
+__all__ = [
+    "random_stragglers",
+    "fixed_count_stragglers",
+    "adversarial_stragglers",
+    "DeadlineStragglerSimulator",
+]
+
+
+def random_stragglers(
+    s: int, p_straggler: float, rng: Optional[np.random.Generator] = None
+) -> np.ndarray:
+    """Paper's model: iid Bern(p_t) stragglers. Returns alive mask (True=alive)."""
+    rng = rng or np.random.default_rng(0)
+    return rng.random(s) >= p_straggler
+
+
+def fixed_count_stragglers(
+    s: int, t: int, rng: Optional[np.random.Generator] = None
+) -> np.ndarray:
+    """Exactly ``t`` uniformly-random stragglers (the paper's experiments)."""
+    rng = rng or np.random.default_rng(0)
+    mask = np.ones(s, dtype=bool)
+    if t > 0:
+        mask[rng.choice(s, size=min(t, s), replace=False)] = False
+    return mask
+
+
+def adversarial_stragglers(assignment: Assignment, t: int) -> np.ndarray:
+    """Greedy worst case: kill the ``t`` nodes that maximize lost coverage.
+
+    Iteratively removes the node whose removal minimizes the resulting minimum
+    shard-replication (ties broken towards larger load).  Used to stress-test
+    constructions: fractional-repetition/cyclic with ``ell ≥ t+1`` must
+    survive this; Bernoulli only survives w.h.p. for random stragglers.
+    """
+    A = assignment.matrix.astype(np.int64)
+    alive = np.ones(assignment.num_nodes, dtype=bool)
+    for _ in range(min(t, assignment.num_nodes - 1)):
+        best_node, best_key = None, None
+        cover = A[alive].sum(axis=0)  # (n,)
+        for i in np.flatnonzero(alive):
+            # Coverage after killing node i.
+            c = cover - A[i]
+            key = (int(c.min()), -int((c == c.min()).sum()), -int(A[i].sum()))
+            if best_key is None or key < best_key:
+                best_key, best_node = key, i
+        alive[best_node] = False
+    return alive
+
+
+@dataclasses.dataclass
+class DeadlineStragglerSimulator:
+    """Deadline-based per-step straggling, the training-loop reality.
+
+    Each node's step latency is lognormal(μ=0, σ) · base; with probability
+    ``p_spike`` a node suffers a multiplicative slowdown (background task,
+    checkpoint flush, network congestion).  A node is a straggler for the step
+    iff its latency exceeds ``deadline``.  Slowdowns persist with probability
+    ``persistence`` (correlated stragglers across steps — the hard case for
+    non-redundant schemes).
+    """
+
+    num_nodes: int
+    deadline: float = 2.0
+    sigma: float = 0.25
+    p_spike: float = 0.08
+    spike_scale: float = 4.0
+    persistence: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._spiked = np.zeros(self.num_nodes, dtype=bool)
+
+    def step(self) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (alive_mask, latencies) for one training step."""
+        rng = self._rng
+        fresh = rng.random(self.num_nodes) < self.p_spike
+        stay = self._spiked & (rng.random(self.num_nodes) < self.persistence)
+        self._spiked = fresh | stay
+        lat = rng.lognormal(mean=0.0, sigma=self.sigma, size=self.num_nodes)
+        lat = np.where(self._spiked, lat * self.spike_scale, lat)
+        return lat <= self.deadline, lat

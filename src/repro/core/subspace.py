@@ -1,0 +1,154 @@
+"""Algorithm 2 — straggler-resilient (r, k)-subspace clustering (paper §3.3.1).
+
+Workers send ε-coresets of their shards; the coordinator forms the
+b-reweighted union (a 2(ε+δ)-coreset of P by Lemma 3') and runs an
+α-approximate (r, k)-subspace solver on it.  Theorem 4:
+cost(P, Ĉ) ≤ α(1+8δ)·OPT.
+
+The local solver here is a k-subspace Lloyd ("k-flats"): assign each point to
+the subspace with least squared residual, refit each subspace by weighted
+PCA of its members.  ``r = 0`` degenerates to k-means (centers = weighted
+means), covering the paper's remark that (r, k)-subspace clustering subsumes
+k-means (r=0) and PCA (k=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans
+from .aggregation import weighted_union
+from .assignment import Assignment
+from .coreset import sensitivity_coreset
+from .kmedian import pack_local_shards
+from .recovery import RecoveryResult, solve_recovery
+
+__all__ = [
+    "SubspaceClustering",
+    "subspace_residual_sq",
+    "subspace_cost",
+    "lloyd_subspace",
+    "resilient_subspace_clustering",
+    "ResilientSubspaceOutput",
+]
+
+_EPS = 1e-12
+
+
+class SubspaceClustering(NamedTuple):
+    bases: jax.Array  # (k, d, r) orthonormal columns
+    means: jax.Array  # (k, d) affine offsets
+    cost: jax.Array  # scalar
+
+
+def subspace_residual_sq(x, bases, means):
+    """(n, k) squared residuals of each point to each affine r-subspace."""
+    xc = x[None, :, :] - means[:, None, :]  # (k, n, d)
+    proj = jnp.einsum("knd,kdr->knr", xc, bases)
+    res = jnp.sum(xc * xc, axis=-1) - jnp.sum(proj * proj, axis=-1)  # (k, n)
+    return jnp.maximum(res.T, 0.0)
+
+
+def subspace_cost(x, bases, means, *, weights=None):
+    w = jnp.ones((x.shape[0],), jnp.float32) if weights is None else weights
+    res = subspace_residual_sq(x, bases, means)
+    return jnp.sum(w * jnp.min(res, axis=1))
+
+
+def _weighted_pca_per_cluster(x, w, idx, k: int, r: int, prev_bases, prev_means):
+    """Refit each cluster's affine subspace by weighted PCA (top-r eigh)."""
+    n, d = x.shape
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32) * w[:, None]
+    tot = jnp.sum(onehot, axis=0)  # (k,)
+    means = (onehot.T @ x) / jnp.maximum(tot, _EPS)[:, None]  # (k, d)
+    xc = x[None, :, :] - means[:, None, :]  # (k, n, d)
+    cov = jnp.einsum("kn,knd,kne->kde", onehot.T, xc, xc)  # (k, d, d)
+    evals, evecs = jnp.linalg.eigh(cov)  # ascending
+    bases = evecs[:, :, -r:] if r > 0 else jnp.zeros((k, d, 0), x.dtype)
+    keep = (tot > _EPS)[:, None, None]
+    bases = jnp.where(keep, bases, prev_bases)
+    means = jnp.where(keep[:, :, 0], means, prev_means)
+    return bases, means
+
+
+@functools.partial(jax.jit, static_argnames=("k", "r", "iters"))
+def lloyd_subspace(
+    key, x, k: int, r: int, *, weights=None, iters: int = 15
+) -> SubspaceClustering:
+    """k-subspace Lloyd on weighted data (α-approximate local/coordinator solver)."""
+    n, d = x.shape
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    # Seed with k-means++ centers and their local PCA directions.
+    centers = kmeans.plusplus_init(key, x, k, weights=w)
+    idx0 = jnp.argmin(
+        jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1), axis=1
+    ).astype(jnp.int32)
+    bases0 = jnp.zeros((k, d, r), x.dtype)
+    means0 = centers
+    bases, means = _weighted_pca_per_cluster(x, w, idx0, k, r, bases0, means0)
+
+    def body(_, carry):
+        bases, means = carry
+        res = subspace_residual_sq(x, bases, means)
+        idx = jnp.argmin(res, axis=1).astype(jnp.int32)
+        return _weighted_pca_per_cluster(x, w, idx, k, r, bases, means)
+
+    bases, means = jax.lax.fori_loop(0, iters, body, (bases, means))
+    return SubspaceClustering(
+        bases=bases, means=means, cost=subspace_cost(x, bases, means, weights=w)
+    )
+
+
+@dataclasses.dataclass
+class ResilientSubspaceOutput:
+    bases: np.ndarray
+    means: np.ndarray
+    cost: float
+    recovery: RecoveryResult
+    coreset_points: np.ndarray
+    coreset_weights: np.ndarray
+
+
+def resilient_subspace_clustering(
+    points: np.ndarray,
+    r: int,
+    k: int,
+    assignment: Assignment,
+    alive: np.ndarray,
+    *,
+    coreset_size: int = 256,
+    recovery_method: str = "auto",
+    seed: int = 0,
+) -> ResilientSubspaceOutput:
+    """Paper Algorithm 2, end-to-end (coreset flavour)."""
+    points = np.asarray(points, dtype=np.float32)
+    alive = np.asarray(alive, dtype=bool)
+    rec = solve_recovery(assignment, alive, method=recovery_method)
+    xs, ws = pack_local_shards(points, assignment)
+    s = xs.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), s)
+
+    def one(key, x, w):
+        cs = sensitivity_coreset(key, x, k=max(k, 1), m=coreset_size, weights=w)
+        return cs.points, cs.weights
+
+    pts_s, wts_s = jax.vmap(one)(keys, jnp.asarray(xs), jnp.asarray(ws))
+    pts_s, wts_s = np.asarray(pts_s), np.asarray(wts_s)
+    y, wy = weighted_union(
+        [pts_s[i] for i in range(s)], [wts_s[i] for i in range(s)],
+        rec.b_full, alive=alive,
+    )
+    sol = lloyd_subspace(
+        jax.random.PRNGKey(seed + 1), jnp.asarray(y), k, r, weights=jnp.asarray(wy)
+    )
+    full_cost = float(subspace_cost(jnp.asarray(points), sol.bases, sol.means))
+    return ResilientSubspaceOutput(
+        bases=np.asarray(sol.bases), means=np.asarray(sol.means), cost=full_cost,
+        recovery=rec, coreset_points=y, coreset_weights=wy,
+    )

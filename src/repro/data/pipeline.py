@@ -1,0 +1,63 @@
+"""Redundant data pipeline: shards → DP groups per the assignment matrix.
+
+Per step, the *unique* global batch is ``n_shards`` microbatches; group ``g``
+materializes the concatenation of its assigned shards' microbatches (the ℓ×
+compute redundancy the paper trades for straggler resilience).  The batch
+tensor is laid out group-major, matching ``loss_fn``'s ``(G, …)`` reshape, so
+``group_weights`` line up by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..train.resilient import RedundantShardPlan
+from . import tokens as tok
+
+__all__ = ["RedundantDataPipeline"]
+
+
+@dataclasses.dataclass
+class RedundantDataPipeline:
+    plan: RedundantShardPlan
+    vocab: int
+    microbatch: int  # sequences per shard per step
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._table = tok.make_markov_table(self.vocab, seed=self.seed)
+        # Fixed shard order per group for the whole run (static shapes).
+        self._group_shards = [
+            self.plan.group_shards(g) for g in range(self.plan.num_groups)
+        ]
+
+    @property
+    def batch_shape(self) -> tuple[int, int]:
+        G = self.plan.num_groups
+        L = self.plan.shards_per_group
+        return (G * L * self.microbatch, self.seq_len)
+
+    def batch(self, step: int) -> np.ndarray:
+        """(G·L·mb, T) int32 tokens, group-major.  Replicated shards produce
+        bit-identical microbatches in every group that holds them."""
+        groups = []
+        for g in range(self.plan.num_groups):
+            parts = [
+                tok.shard_batch(self._table, int(s), step, self.microbatch, self.seq_len)
+                for s in self._group_shards[g]
+            ]
+            groups.append(np.concatenate(parts, axis=0))
+        return np.concatenate(groups, axis=0)
+
+    def unique_batch(self, step: int) -> np.ndarray:
+        """The deduplicated (n_shards·mb, T) batch — the 'ground truth' data
+        of the step, used by tests to compare against non-redundant runs."""
+        parts = [
+            tok.shard_batch(self._table, s, step, self.microbatch, self.seq_len)
+            for s in range(self.plan.num_shards)
+        ]
+        return np.concatenate(parts, axis=0)

@@ -1,0 +1,163 @@
+"""Public attention entry point with three interchangeable implementations.
+
+* ``pallas``  — the TPU-target kernel (kernel.py); validated in interpret
+  mode on CPU against ``ref``.
+* ``chunked`` — pure-jnp flash (online softmax, Python loop over query chunks
+  with a `lax.scan` over each chunk's *own* causal KV range).  This is the
+  implementation the multi-pod dry-run lowers: no T×T materialization, FLOPs
+  within ~cq/T of the causal optimum, compact HLO.  Supports GQA and sliding
+  windows (RecurrentGemma local attention).
+* ``ref``     — naive oracle (ref.py).
+
+``impl="auto"`` picks pallas on TPU, chunked elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = ["flash_attention", "decode_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_chunks(T: int, S: int, window) -> tuple[int, int]:
+    # Cap the Python-level q-chunk count at ~32 to bound HLO size; keep the
+    # diagonal-block waste ≤ ~3% of causal FLOPs.
+    cq = max(512, T // 32)
+    cq = min(cq, T)
+    while T % cq != 0:  # T is a power-of-two multiple in all our shapes
+        cq //= 2
+    ck = min(1024, S)
+    while S % ck != 0:
+        ck //= 2
+    return max(cq, 1), max(ck, 1)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """Flash attention in pure jnp.  q: (B,T,H,dh); k,v: (B,S,KV,dh)."""
+    B, T, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = (dh ** -0.5) if scale is None else scale
+    cq, ck = _pick_chunks(T, S, window)
+    nq = T // cq
+    off = S - T  # decode-style alignment: q row t ↔ absolute position t + off
+    qg = q.reshape(B, T, KV, g, dh).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    outs = []
+    for i in range(nq):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, i * cq, cq, axis=1)  # (B,cq,KV,g,dh)
+        row = off + i * cq + jnp.arange(cq)  # absolute positions of this block
+        hi = off + (i + 1) * cq if causal else S  # keys strictly before hi
+        lo = 0 if window is None else max(0, off + i * cq - int(window) + 1)
+        j0, j1 = lo // ck, math.ceil(min(hi, S) / ck)
+        n_blocks = max(1, j1 - j0)
+
+        def body(carry, j):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kf, j * ck, ck, axis=1)  # (B,ck,KV,dh)
+            v_blk = jax.lax.dynamic_slice_in_dim(vf, j * ck, ck, axis=1)
+            col = j * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk)  # (B,KV,g,cq,ck)
+            mask = jnp.ones((cq, ck), dtype=bool)
+            if causal:
+                mask &= row[:, None] >= col[None, :]
+            if window is not None:
+                mask &= col[None, :] > row[:, None] - int(window)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+            p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[..., None]), 0.0)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, v_blk)
+            return (m_new, l, acc), ()
+
+        init = (
+            jnp.full((B, KV, g, cq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, KV, g, cq), jnp.float32),
+            jnp.zeros((B, KV, g, cq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, j0 + jnp.arange(n_blocks))
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o = (acc / safe[..., None]).transpose(0, 3, 1, 2, 4)  # (B,cq,KV,g,dh)
+        outs.append(o.reshape(B, cq, H, dh))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def _pallas_attention(q, k, v, *, causal, scale):
+    B, T, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    bq = min(512, T)
+    while T % bq:
+        bq //= 2
+    bk = min(512, S)
+    while S % bk:
+        bk //= 2
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    out = _kernel.flash_attention_kernel_call(
+        qf, kf, vf, group=g, causal=causal, scale=scale,
+        bq=bq, bk=bk, interpret=not _on_tpu(),
+    )
+    return out.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None, impl="auto"):
+    """Dispatching attention.  Shapes: q (B,T,H,dh); k,v (B,S,KV,dh)."""
+    dh = q.shape[-1]
+    scale = (dh ** -0.5) if scale is None else scale
+    if impl == "ref":
+        assert window is None, "ref oracle does not model sliding windows"
+        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        if window is None:
+            return _pallas_attention(q, k, v, causal=causal, scale=scale)
+        # Windowed attention falls through to chunked (structural skipping
+        # already yields the T·W cost there).
+    return chunked_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None, scale=None):
+    """Single-token decode attention against a (possibly ring) KV cache.
+
+    q: (B, 1, H, dh); caches: (B, S, KV, dh); ``cur_len``: (B,) or scalar —
+    number of valid cache positions.  Positions ≥ cur_len are masked.
+    """
+    B, _, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = (dh ** -0.5) if scale is None else scale
+    # Read the cache in ITS OWN dtype and accumulate in f32 via the MXU
+    # (preferred_element_type) — upcasting the cache materializes (and, in a
+    # scanned decode, carries) a full f32 copy of it: §Perf decode iteration.
+    qg = (q.reshape(B, KV, g, dh) * scale).astype(k_cache.dtype)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(S)[None, :]  # (1, S)
+    cur = jnp.asarray(cur_len).reshape(-1, 1)  # (B, 1) or (1, 1)
+    valid = pos < cur
+    if window is not None:
+        valid &= pos >= cur - int(window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

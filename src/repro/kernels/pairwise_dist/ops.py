@@ -1,0 +1,82 @@
+"""Jit'd public wrappers around the pairwise-distance kernels.
+
+Handles padding to block multiples, platform dispatch (Pallas compiled on
+TPU, interpret-mode Pallas or the jnp oracle elsewhere) and unpadding.
+``impl`` ∈ {"auto", "pallas", "ref"}.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = ["pairwise_sqdist", "assign_min"]
+
+_PAD_DIST = jnp.float32(3.0e38)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % m
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _pick_blocks(n: int, k: int, d: int) -> tuple[int, int]:
+    """VMEM-aware tile selection: keep (bn·d + bk·d + bn·bk) f32 ≲ 4 MB and
+    MXU-aligned where possible."""
+    bn = 256 if n >= 256 else max(8, 1 << (max(n - 1, 1)).bit_length())
+    bk = 128 if k >= 128 else max(8, 1 << (max(k - 1, 1)).bit_length())
+    # Shrink bn for very wide d so the x tile stays ≤ 2 MB.
+    while bn > 8 and bn * d * 4 > 2 * 1024 * 1024:
+        bn //= 2
+    return bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pairwise_sqdist(x, c, *, impl: str = "auto"):
+    """Squared Euclidean distance matrix (n, k) f32."""
+    if impl == "ref" or (impl == "auto" and x.shape[0] * c.shape[0] <= 1 << 14):
+        return _ref.pairwise_sqdist_ref(x, c)
+    n, d = x.shape
+    k = c.shape[0]
+    bn, bk = _pick_blocks(n, k, d)
+    xp = _pad_to(x, bn, 0)
+    cp = _pad_to(c, bk, 0)
+    out = _kernel.pairwise_sqdist_kernel_call(
+        xp, cp, bn=bn, bk=bk, interpret=not _on_tpu()
+    )
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def assign_min(x, c, *, impl: str = "auto"):
+    """Nearest-center assignment: (idx (n,) i32, sqdist (n,) f32).
+
+    Padded centers are pushed to ~+inf distance so they can never win the
+    argmin; padded rows are dropped on return.
+    """
+    if impl == "ref" or (impl == "auto" and x.shape[0] * c.shape[0] <= 1 << 14):
+        return _ref.assign_min_ref(x, c)
+    n, d = x.shape
+    k = c.shape[0]
+    bn, bk = _pick_blocks(n, k, d)
+    xp = _pad_to(x, bn, 0)
+    # Push padded centers far away: pad with a huge coordinate value.
+    cp = _pad_to(c, bk, 0, value=1.0e18)
+    idx, dist = _kernel.assign_min_kernel_call(
+        xp, cp, bn=bn, bk=bk, interpret=not _on_tpu()
+    )
+    return idx[:n], dist[:n]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: weighted segment-sum (Lloyd centroid update).
+
+GPU implementations scatter-add into per-cluster accumulators through shared
+memory atomics.  TPU has no fast scatter — instead each (bn, d) x-tile builds
+a (bn, k) one-hot dispatch in VMEM and accumulates
+
+    sums   += (onehot · w)ᵀ @ x        (MXU matmul)
+    totals += Σ_rows (onehot · w)
+
+into the (k, d)/(k,) output refs, which are revisited across the sequential n
+grid dimension.  k·d must fit VMEM (clustering-scale k ≤ few·1024 — always
+true for the paper's workloads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["weighted_segsum_kernel_call"]
+
+
+def _segsum_kernel(x_ref, w_ref, idx_ref, sums_ref, tot_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    w = w_ref[...].astype(jnp.float32)  # (bn,)
+    idx = idx_ref[...]  # (bn,)
+    k = sums_ref.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    oh = jnp.where(idx[:, None] == col, w[:, None], 0.0)  # (bn, k)
+    sums_ref[...] += jax.lax.dot_general(
+        oh, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    tot_ref[...] += jnp.sum(oh, axis=0)
+
+
+def weighted_segsum_kernel_call(x, w, idx, k: int, *, bn: int = 512, interpret: bool = True):
+    """Inputs pre-padded so n % bn == 0; padded rows must carry w = 0."""
+    n, d = x.shape
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, idx)

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the weighted segment-sum kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = ["weighted_segsum"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def weighted_segsum(x, w, idx, k: int, *, impl: str = "auto"):
+    """Per-cluster weighted sums and totals.  See ref.weighted_segsum_ref."""
+    n, d = x.shape
+    if impl == "ref" or (impl == "auto" and n * k <= 1 << 16):
+        return _ref.weighted_segsum_ref(x, w, idx, k)
+    bn = min(512, max(8, 1 << (max(n - 1, 1)).bit_length()))
+    rem = (-n) % bn
+    if rem:
+        x = jnp.pad(x, ((0, rem), (0, 0)))
+        w = jnp.pad(w, (0, rem))  # zero weight ⇒ padded rows are inert
+        idx = jnp.pad(idx, (0, rem))
+    return _kernel.weighted_segsum_kernel_call(x, w, idx, k, bn=bn, interpret=not _on_tpu())

@@ -1,0 +1,255 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits
+        compiled.cost_analysis()     # FLOPs/bytes for §Roofline
+
+Meshes: (16, 16) single pod and (2, 16, 16) multi-pod (512 placeholder host
+devices — the XLA_FLAGS line above MUST precede every other import).
+Results stream to a JSON-lines file consumed by benchmarks/roofline and
+EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS
+from ..models import transformer as T
+from ..models.registry import get_config
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import init_train_state, make_train_step
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .roofline import model_flops, roofline_terms
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    make_context,
+    param_shardings,
+    state_shardings,
+)
+from .specs import SHAPES, cell_is_applicable, input_specs
+
+
+def _num_groups(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    layout: str = "fsdp_tp",
+    remat: str = "full",
+    keep_hlo: bool = False,
+    moe_routing: str = "pjit",
+    cache_layout: str = "feature",
+    accum_steps: int = 1,
+    mesh_shape=None,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    mesh_name = (
+        "x".join(map(str, mesh_shape)) if mesh_shape
+        else ("2x16x16" if multi_pod else "16x16")
+    )
+    chips = mesh.devices.size
+    ctx = make_context(mesh, attn_impl="chunked", remat=remat)
+    import dataclasses as _dc
+
+    ctx = _dc.replace(ctx, moe_routing=moe_routing)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        specs = input_specs(cfg, shape, num_groups=_num_groups(mesh))
+        state_struct = jax.eval_shape(
+            lambda _: init_train_state(jax.random.PRNGKey(0), cfg), 0
+        )
+        st_sh = state_shardings(state_struct, mesh, layout=layout)
+        b_sh = batch_shardings(specs, mesh)
+        step = make_train_step(
+            cfg, ctx, AdamWConfig(), accum_steps=accum_steps,
+            num_groups=_num_groups(mesh),
+        )
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
+        lowered = jitted.lower(state_struct, specs)
+    elif shape.kind == "prefill":
+        specs = input_specs(cfg, shape)
+        params_struct = jax.eval_shape(
+            lambda _: T.init_params(jax.random.PRNGKey(0), cfg), 0
+        )
+        p_sh = param_shardings(params_struct, mesh, layout=layout)
+        b_sh = batch_shardings(specs, mesh)
+
+        def prefill_fn(params, batch):
+            return T.prefill(params, batch, cfg, ctx)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_struct, specs)
+    else:  # decode
+        specs = input_specs(cfg, shape)
+        B = shape.global_batch
+        params_struct = jax.eval_shape(
+            lambda _: T.init_params(jax.random.PRNGKey(0), cfg), 0
+        )
+        cache_struct = jax.eval_shape(
+            lambda _: T.init_cache(cfg, B, shape.seq_len), 0
+        )
+        p_sh = param_shardings(params_struct, mesh, layout=layout)
+        c_sh = cache_shardings(cache_struct, mesh, B, layout=cache_layout)
+        tok_sh = batch_shardings({"tokens_t": specs["tokens_t"]}, mesh)["tokens_t"]
+
+        def decode_fn(params, cache, tok, cur):
+            return T.decode_step(params, cache, tok, cur, cfg, ctx)
+
+        jitted = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, tok_sh, None))
+        lowered = jitted.lower(
+            params_struct, cache_struct, specs["tokens_t"], specs["cur_len"]
+        )
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    ha = analyze_hlo(hlo, default_trip=cfg.scan_repeats)
+    mf = model_flops(cfg, shape)
+    rep = roofline_terms(arch, shape_name, mesh_name, chips, ha, mf)
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "layout": layout,
+        "remat": remat,
+        "moe_routing": moe_routing,
+        "cache_layout": cache_layout,
+        "accum_steps": accum_steps,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(ha["flops"]),
+        "bytes_per_device": float(ha["bytes"]),
+        "xla_cost_flops_loop_once": float(cost.get("flops", 0.0)),
+        "collectives": {
+            "total_bytes": ha["collective_bytes"],
+            "by_kind": ha["collectives_by_kind"],
+            "ops": ha["collective_ops"],
+        },
+        "model_flops": mf["model_flops"],
+        "active_params": mf["active_params"],
+        "total_params": mf["total_params"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": rep.row(),
+    }
+    if keep_hlo:
+        out["hlo_path"] = f"/tmp/hlo_{arch}_{shape_name}_{mesh_name}.txt"
+        with open(out["hlo_path"], "w") as f:
+            f.write(hlo)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--layout", default="fsdp_tp")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--moe-routing", default="pjit", choices=("pjit", "local"))
+    ap.add_argument("--cache-layout", default="feature", choices=("feature", "seq"))
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mesh-shape", default=None, help="e.g. 64x4 (same chip count)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    sink = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+        try:
+            res = lower_cell(
+                arch, shape, multi_pod=mp, layout=args.layout,
+                remat=args.remat, keep_hlo=args.keep_hlo,
+                moe_routing=args.moe_routing, cache_layout=args.cache_layout,
+                accum_steps=args.accum,
+                mesh_shape=(
+                    tuple(int(x) for x in args.mesh_shape.split("x"))
+                    if args.mesh_shape else None
+                ),
+            )
+        except Exception as e:  # a failing cell is a bug in our system
+            failures += 1
+            res = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "error": f"{type(e).__name__}: {e}",
+            }
+            traceback.print_exc()
+        line = json.dumps(res)
+        if sink:
+            sink.write(line + "\n")
+            sink.flush()
+        if "skipped" in res:
+            print(f"[skip] {tag}: {res['skipped'][:80]}")
+        elif "error" in res:
+            print(f"[FAIL] {tag}: {res['error'][:200]}")
+        else:
+            r = res["roofline"]
+            print(
+                f"[ok] {tag}: compile={res['compile_s']:.1f}s "
+                f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+                f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                f"useful={r['useful_ratio']:.2f} roofline={r['roofline_fraction']:.2f}"
+            )
+    if sink:
+        sink.close()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+its trip count (verified empirically), which under-counts every scanned layer
+stack by ~n_layers×.  This module re-derives FLOPs / HBM bytes / collective
+bytes directly from the compiled HLO text with per-computation execution
+multipliers:
+
+  * ENTRY runs once;
+  * a while body/condition runs ``trip`` times (trip parsed from the largest
+    integer constant in the loop condition — exact for `lax.scan`/`fori_loop`
+    whose bounds are compile-time constants);
+  * nesting multiplies (time-scans inside the layer scan);
+  * fusion sub-computations are NOT walked — a fusion reads its operands and
+    writes its result exactly once, which is the whole point of fusion.
+
+FLOPs: 2 · |result| · contracted-extent for every ``dot`` (matmul dominates
+these models; elementwise FLOPs are deliberately excluded and reported
+separately as an approximation note).
+
+Bytes: per-op HBM traffic model keyed on opcode (slices/gathers touch the
+slice, not the operand; fusions touch operands+result; elementwise 3×result;
+in-place updates 2×update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+__all__ = ["HloCostModel", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# `%name = SHAPE opcode(...)` where SHAPE is either `dtype[dims]{layout}` or
+# a tuple `(dtype[..], /*index=5*/dtype[..], …)` (while results).
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\(.*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_PARAM_RE = re.compile(r"([\w\.\-]+)\s*:\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s,]*)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_list(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        total += _DTYPE_BYTES.get(dt, 4) * (math.prod(dims) if dims else 1)
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_shapes: list
+    operands: list
+    line: str
+
+
+class _Computation:
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.ops: list[_Op] = []
+        self.symbols: dict[str, list] = {}
+        # Parameter shapes from the header signature (tuple-typed params of
+        # while bodies carry all their element shapes).
+        for m in _PARAM_RE.finditer(header):
+            self.symbols[m.group(1).lstrip("%")] = _shape_list(m.group(2))
+
+
+class HloCostModel:
+    def __init__(self, hlo: str, *, default_trip: int = 1):
+        self.default_trip = default_trip
+        self.computations: dict[str, _Computation] = {}
+        self._fusion_called: set[str] = set()
+        self._fusion_edges: list[tuple[str, str]] = []  # (caller, fused comp)
+        self._while_edges: list[tuple[str, str, str]] = []  # (parent, body, cond)
+        self._known_trips: dict[tuple[str, str], int] = {}
+        self._parse(hlo)
+        self._multipliers = self._compute_multipliers()
+        self.totals = self._accumulate()
+
+    # ------------------------------------------------------------- parsing
+
+    def _parse(self, hlo: str) -> None:
+        cur: Optional[_Computation] = None
+        for raw in hlo.splitlines():
+            line = raw.strip()
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.endswith("{"):
+                cur = _Computation(hdr.group(2), hdr.group(3))
+                self.computations[cur.name] = cur
+                continue
+            if cur is None or not line or line == "}":
+                if line == "}":
+                    cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, shape_txt, opcode = m.group(1), m.group(2) or "", m.group(3)
+            result_shapes = _shape_list(shape_txt)
+            cur.symbols[name] = result_shapes
+            # Operand names: refs inside the first (...) after the opcode.
+            paren = line.find(opcode + "(")
+            operand_txt = ""
+            if paren >= 0:
+                depth = 0
+                start = paren + len(opcode)
+                for i in range(start, len(line)):
+                    if line[i] == "(":
+                        depth += 1
+                    elif line[i] == ")":
+                        depth -= 1
+                        if depth == 0:
+                            operand_txt = line[start + 1 : i]
+                            break
+            operands = _OPERAND_RE.findall(operand_txt)
+            op = _Op(name, opcode, result_shapes, operands, line)
+            cur.ops.append(op)
+            if opcode == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if fm:
+                    self._fusion_called.add(fm.group(1))
+                    self._fusion_edges.append((cur.name, fm.group(1)))
+            if opcode == "while":
+                bm = _WHILE_BODY_RE.search(line)
+                cm = _WHILE_COND_RE.search(line)
+                if bm and cm:
+                    self._while_edges.append((cur.name, bm.group(1), cm.group(1)))
+                    tm = _TRIP_RE.search(line)  # XLA's exact trip count
+                    if tm:
+                        self._known_trips[(cur.name, bm.group(1))] = int(tm.group(1))
+
+    def _compute_multipliers(self) -> dict[str, float]:
+        mult: dict[str, float] = {}
+        entry = None
+        for name in self.computations:
+            if entry is None:
+                entry = name  # ENTRY is parsed like others; track via 'main'
+        # Identify entry as the computation that nothing calls.
+        called = {b for _, b, _ in self._while_edges} | {
+            c for _, _, c in self._while_edges
+        } | set(self._fusion_called)
+        roots = [n for n in self.computations if n not in called]
+        trips: dict[tuple[str, str], int] = {}
+        for parent, body, cond in self._while_edges:
+            if (parent, body) in self._known_trips:
+                t = self._known_trips[(parent, body)]
+            else:
+                cond_text = "\n".join(
+                    op.line
+                    for op in self.computations.get(cond, _Computation("", "")).ops
+                )
+                consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+                t = max(consts) if consts else self.default_trip
+            trips[(parent, body)] = t
+            trips[(parent, cond)] = t
+
+        for r in roots:
+            mult[r] = 1.0
+        changed = True
+        while changed:
+            changed = False
+            for parent, body, cond in self._while_edges:
+                if parent in mult:
+                    t = trips[(parent, body)]
+                    for target in (body, cond):
+                        new = mult[parent] * t
+                        if mult.get(target, 0) < new:
+                            mult[target] = new
+                            changed = True
+            # Fused sub-computations execute as part of their caller: their
+            # DOTs must carry the caller's multiplier (bytes stay excluded).
+            for caller, fused in self._fusion_edges:
+                if caller in mult and mult.get(fused, 0) < mult[caller]:
+                    mult[fused] = mult[caller]
+                    changed = True
+        return mult
+
+    # --------------------------------------------------------- accumulation
+
+    def _op_bytes(self, comp: _Computation, op: _Op, *, is_root_comp: bool) -> float:
+        """SSA-liveness HBM model: every produced tensor costs one write plus
+        one (downstream) read — attributing reads at the producer avoids the
+        multi-consumer over-count the CPU backend's shallow fusion would
+        otherwise cause.  Slicing ops cost the slice, in-place updates the
+        update.  Loop-carried tuples and their projections are free (their
+        consumption is captured at the dynamic-slice / gte results)."""
+
+        def operand_bytes(idx):
+            if idx < len(op.operands):
+                return _bytes_of(comp.symbols.get(op.operands[idx], []))
+            return 0.0
+
+        res = _bytes_of(op.result_shapes)
+        oc = op.opcode
+        if oc in ("constant", "tuple", "get-tuple-element", "bitcast",
+                  "iota", "while", "conditional", "after-all", "partition-id",
+                  "replica-id", "rng-bit-generator", "optimization-barrier",
+                  "copy-start", "copy-done"):
+            return 0.0
+        if oc == "parameter":
+            # Entry params (weights/inputs) are read once per step; loop-body
+            # params are the carried tuple — already accounted at slices.
+            return float(res) if is_root_comp else 0.0
+        if oc == "dynamic-update-slice":
+            upd = operand_bytes(1)
+            return 2.0 * (upd if upd else res)
+        if oc == "scatter":
+            upd = operand_bytes(2)
+            return 2.0 * (upd if upd else res)
+        if oc == "fusion" and "dynamic-update-slice" in op.name:
+            # In-place update fusion (scan-carried caches/stacked outputs):
+            # the result-sized operand(s) are aliased pass-throughs (on TPU
+            # the update happens in place; the CPU backend's bf16 emulation
+            # can add a same-sized dtype-shadow operand — also aliased).
+            # Real traffic ≈ the small operands (the update slice + indices).
+            small = [
+                b for b in (
+                    _bytes_of(comp.symbols.get(n, [])) for n in op.operands
+                )
+                if b < res / 2
+            ]
+            delta = sum(small)
+            return 2.0 * delta if delta else 2.0 * res
+        return 2.0 * res
+
+    def _op_flops(self, comp: _Computation, op: _Op) -> float:
+        if op.opcode != "dot":
+            return 0.0
+        res_elems = sum(
+            math.prod(d) if d else 1 for _, d in op.result_shapes
+        )
+        cm = _CONTRACT_RE.search(op.line)
+        contracted = 1
+        if cm and op.operands:
+            lhs = comp.symbols.get(op.operands[0], [])
+            if lhs:
+                dims = lhs[0][1]
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contracted *= dims[int(idx)]
+        return 2.0 * res_elems * contracted
+
+    def _accumulate(self) -> dict:
+        flops = 0.0
+        bytes_ = 0.0
+        coll: dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+        coll_ops = 0
+        dots = 0
+        loop_comps = set()
+        for _, body, cond in self._while_edges:
+            loop_comps.add(body)
+            loop_comps.add(cond)
+        for name, comp in self.computations.items():
+            fused = name in self._fusion_called
+            m = self._multipliers.get(name, 1.0)
+            is_root = name not in loop_comps and not fused
+            for op in comp.ops:
+                # FLOPs: everywhere (dots can live inside output fusions);
+                # bytes/collectives: only outside fusions (fusions touch HBM
+                # exactly once, at the fusion op itself).
+                flops += m * self._op_flops(comp, op)
+                if op.opcode == "dot":
+                    dots += 1
+                if fused:
+                    continue
+                bytes_ += m * self._op_bytes(comp, op, is_root_comp=is_root)
+                for k in _COLL_KINDS:
+                    if op.opcode == k or op.opcode == k + "-start":
+                        coll[k] += m * _bytes_of(op.result_shapes)
+                        coll_ops += 1
+        return {
+            "flops": flops,
+            "bytes": bytes_,
+            "collective_bytes": sum(coll.values()),
+            "collectives_by_kind": {k: v for k, v in coll.items() if v},
+            "collective_ops": coll_ops,
+            "dot_ops": dots,
+        }
+
+
+def analyze_hlo(hlo: str, *, default_trip: int = 1) -> dict:
+    return HloCostModel(hlo, default_trip=default_trip).totals

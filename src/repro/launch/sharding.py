@@ -1,0 +1,240 @@
+"""Sharding rules: logical param/activation layouts → PartitionSpecs.
+
+Default production layout (MaxText-style FSDP + TP):
+  * ``model`` (TP): attention heads / d_ff / experts / vocab,
+  * ``data``  (FSDP): the other weight dim; optimizer state inherits the
+    param layout (ZeRO-1 for free),
+  * ``pod``   (DP): pure replication across DCN,
+  * batch dims: (pod, data).
+
+Every rule passes through a divisibility check — a dim that does not divide
+by its mesh axis falls back to replication on that dim (e.g. internvl2's 14
+heads on a 16-way model axis; recorded in the roofline notes).
+
+``layout`` selects between rule sets — the perf hillclimb (§Perf) swaps
+layouts without touching model code.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.transformer import ModelContext
+
+__all__ = ["make_context", "param_spec", "param_shardings", "state_shardings", "batch_shardings", "cache_shardings"]
+
+
+# Rules: (path regex, spec template per trailing dim). Logical names:
+#   "tp" → model axis, "fsdp" → data axis, None → replicated.
+# Templates apply to the LAST len(template) dims; leading (stacked-layer)
+# dims are always None.
+_RULES_FSDP_TP = [
+    (r"embed$", ("tp", "fsdp")),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"attn/w[qkv]$", ("fsdp", "tp")),
+    (r"attn/b[qkv]$", ("tp",)),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"(mlp|ffn)/(gate|up)$", ("fsdp", "tp")),
+    (r"(mlp|ffn)/down$", ("tp", "fsdp")),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("tp", "fsdp", None)),
+    (r"moe/w_down$", ("tp", None, "fsdp")),
+    (r"moe/shared/(gate|up)$", ("fsdp", "tp")),
+    (r"moe/shared/down$", ("tp", "fsdp")),
+    # mLSTM
+    (r"w_up$", ("fsdp", "tp")),
+    (r"w[qkv]$", ("fsdp", "tp")),
+    (r"w_[if]$", ("fsdp", None)),
+    (r"w_down$", ("tp", "fsdp")),
+    # sLSTM (d×d gate weights + per-head recurrent)
+    (r"w_[zifo]$", ("fsdp", "tp")),
+    (r"r_[zifo]$", (None, None, None)),
+    (r"w_out$", ("tp", "fsdp")),
+    # RG-LRU
+    (r"w_x$", ("fsdp", "tp")),
+    (r"w_gate$", ("fsdp", "tp")),
+    (r"w_[ir]$", ("fsdp", "tp")),
+    (r"lam$", ("tp",)),
+    (r"conv/w$", (None, "tp")),
+    (r"conv/b$", ("tp",)),
+]
+
+# Alternative layout for hillclimbing: pure TP (no FSDP) — params replicated
+# over data; removes per-layer weight all-gathers at the cost of memory.
+_RULES_TP_ONLY = [
+    (pat, tuple("tp" if a == "tp" else None for a in spec))
+    for pat, spec in _RULES_FSDP_TP
+]
+
+# Alternative: FSDP-only (no TP) — every weight sharded on dim 0 over data.
+_RULES_FSDP_ONLY = [
+    (pat, tuple("fsdp" if i == 0 else None for i, _ in enumerate(spec)))
+    for pat, spec in _RULES_FSDP_TP
+]
+
+# xLSTM variant: the mLSTM inner dimension (H=4 heads × dh=1024) does not
+# shard cleanly over a 16-way model axis (head-structured cell ops force
+# GSPMD to psum/gather (B,T,d_inner)-sized activations every layer).  Keep
+# those weights FSDP-only — the model axis idles through the cell, but the
+# per-layer activation collectives disappear (§Perf iteration B1).
+_RULES_SSM_FSDP = []
+for _pat, _spec in _RULES_FSDP_TP:
+    if _pat in (r"w_up$", r"w[qkv]$", r"w_down$", r"w_[if]$"):
+        _RULES_SSM_FSDP.append(
+            (_pat, tuple("fsdp" if a == "fsdp" else None for a in _spec))
+        )
+    else:
+        _RULES_SSM_FSDP.append((_pat, _spec))
+
+_LAYOUTS = {
+    "fsdp_tp": _RULES_FSDP_TP,
+    "tp_only": _RULES_TP_ONLY,
+    "fsdp_only": _RULES_FSDP_ONLY,
+    "ssm_fsdp": _RULES_SSM_FSDP,
+}
+
+
+def _axes_of(mesh: Mesh):
+    names = set(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    model = "model" if "model" in names else None
+    fsdp = "data" if "data" in names else None
+    return batch, model, fsdp
+
+
+def make_context(mesh: Optional[Mesh], *, attn_impl="auto", remat="none") -> ModelContext:
+    if mesh is None:
+        return ModelContext(attn_impl=attn_impl, remat=remat)
+    batch, model, fsdp = _axes_of(mesh)
+    return ModelContext(
+        mesh=mesh, batch_axes=batch, model_axis=model, fsdp_axis=fsdp,
+        attn_impl=attn_impl, remat=remat,
+    )
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, shape, mesh: Mesh, *, layout: str = "fsdp_tp") -> P:
+    """Spec for one param leaf with divisibility fallback."""
+    _, model, fsdp = _axes_of(mesh)
+    logical = {"tp": model, "fsdp": fsdp}
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for pat, template in _LAYOUTS[layout]:
+        if re.search(pat, path_str):
+            nlead = len(shape) - len(template)
+            if nlead < 0:
+                continue
+            spec = [None] * nlead
+            for dim, name in zip(shape[nlead:], template):
+                ax = logical.get(name)
+                if ax is not None and dim % sizes.get(ax, 1) == 0 and sizes.get(ax, 1) > 1:
+                    spec.append(ax)
+                else:
+                    spec.append(None)
+            return P(*spec)
+    return P()  # norms, biases, anything unmatched: replicated
+
+
+def param_shardings(params, mesh: Mesh, *, layout: str = "fsdp_tp"):
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(_path_str(path), leaf.shape, mesh, layout=layout)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def state_shardings(state, mesh: Mesh, *, layout: str = "fsdp_tp"):
+    """TrainState shardings: params/m/v/ef share the param layout; step is
+    replicated."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("step") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # Strip the state-level prefixes (params/, opt/m/, opt/v/, ef/).
+        core = re.sub(r"^(params|opt/m|opt/v|ef|0|1/1|1/2|2)/", "", ps)
+        core = re.sub(r"^(m|v)/", "", core)
+        return NamedSharding(mesh, param_spec(core, leaf.shape, mesh, layout=layout))
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """tokens/prefix_embeds sharded over (pod, data) batch axes; scalars and
+    group weights replicated."""
+    bspec, _, _ = _axes_of(mesh)
+    bs = bspec if len(bspec) > 1 else (bspec[0] if bspec else None)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if "group_weights" in name or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if leaf.ndim >= 1 and leaf.shape[0] % _nbatch(mesh) == 0:
+            return NamedSharding(mesh, P(bs, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def _nbatch(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in ("pod", "data"):
+        n *= sizes.get(a, 1)
+    return max(n, 1)
+
+
+def cache_shardings(cache, mesh: Mesh, batch_size: int, *, layout: str = "feature"):
+    """Decode caches: shard the batch dim over (pod, data) when divisible.
+
+    ``layout="feature"`` (baseline) additionally shards the largest trailing
+    feature dim over ``model``; ``layout="seq"`` shards the KV **sequence**
+    dim instead — sequence-parallel decode attention (partial softmax stats
+    psum'd over model), which removes the cache resharding copies GSPMD
+    otherwise inserts (§Perf iteration on the decode cells)."""
+    bspec, model, _ = _axes_of(mesh)
+    bs = bspec if len(bspec) > 1 else (bspec[0] if bspec else None)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nb = _nbatch(mesh)
+    msize = sizes.get(model, 1) if model else 1
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = _path_str(path)
+        # Find the batch dim: stacked caches are (R, B, ...), tail (B, ...).
+        spec = [None] * len(shape)
+        bdim = None
+        for i, d in enumerate(shape[:2]):
+            if d == batch_size and batch_size % nb == 0 and nb > 1:
+                spec[i] = bs
+                bdim = i
+                break
+        if model and msize > 1:
+            if layout == "seq" and name.endswith(("k", "v")) and bdim is not None:
+                sdim = bdim + 1  # (…, B, S, KV, dh): the sequence dim
+                if sdim < len(shape) and shape[sdim] % msize == 0 and shape[sdim] >= msize:
+                    spec[sdim] = model
+                    return NamedSharding(mesh, P(*spec))
+            # feature layout: largest trailing dim divisible by model.
+            for i in range(len(shape) - 1, 1, -1):
+                if spec[i] is None and shape[i] % msize == 0 and shape[i] >= msize:
+                    spec[i] = model
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,88 @@
+"""GQA attention block (global or sliding-window) with train/prefill/decode
+paths.  The heavy math lives in repro.kernels.flash_attention (Pallas on TPU,
+chunked pure-jnp for the dry-run/CPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import ops as fa
+from . import layers as L
+from .registry import ModelConfig
+
+__all__ = ["attn_init", "attn_apply", "attn_decode_step"]
+
+
+def attn_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], d, H * dh, dtype=dtype),
+        "wk": L.dense_init(ks[1], d, KV * dh, dtype=dtype),
+        "wv": L.dense_init(ks[2], d, KV * dh, dtype=dtype),
+        "wo": L.dense_init(ks[3], H * dh, d, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((KV * dh,), dtype)
+        p["bv"] = jnp.zeros((KV * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dtype=dtype)
+        p["k_norm"] = L.rmsnorm_init(dh, dtype=dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, compute_dtype):
+    B, T, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xc = x.astype(compute_dtype)
+    q = xc @ p["wq"].astype(compute_dtype)
+    k = xc @ p["wk"].astype(compute_dtype)
+    v = xc @ p["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(B, T, H, dh)
+    k = k.reshape(B, T, KV, dh)
+    v = v.reshape(B, T, KV, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], eps=cfg.rms_eps)
+        k = L.rmsnorm(k, p["k_norm"], eps=cfg.rms_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, positions, window=None, impl="auto"):
+    """Training / prefill forward.  x: (B, T, d).  Returns (out, (k, v))."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _project_qkv(p, x, cfg, positions, compute_dtype)
+    o = fa.flash_attention(q, k, v, causal=True, window=window, impl=impl)
+    B, T = x.shape[:2]
+    out = o.reshape(B, T, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), (k, v)
+
+
+def attn_decode_step(p, x_t, cache_k, cache_v, cur_len, cfg: ModelConfig, *, window=None):
+    """One-token decode.  x_t: (B, 1, d); caches (B, S, KV, dh) updated at
+    position ``cur_len`` (ring-indexed when a sliding window is active and
+    the cache is sized to the window)."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    S = cache_k.shape[1]
+    pos = jnp.full((x_t.shape[0],), cur_len, jnp.int32)[:, None]  # (B, 1)
+    q, k, v = _project_qkv(p, x_t, cfg, pos, compute_dtype)
+    slot = (cur_len % S) if window is not None else cur_len
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if window is None:
+        o = fa.decode_attention(q, cache_k, cache_v, cur_len + 1)
+    else:
+        # Ring cache: all S slots are valid once full; mask by recency.
+        # Positions in the ring correspond to absolute times
+        # (cur_len − S + 1 + offset); attention over the last min(S, cur+1).
+        o = fa.decode_attention(q, cache_k, cache_v, jnp.minimum(cur_len + 1, S))
+    B = x_t.shape[0]
+    out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(compute_dtype)
+    return out.astype(x_t.dtype), cache_k, cache_v

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit is a *linear* diagonal recurrence
+
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(−c · r_t · softplus(Λ)),   r_t, i_t = σ(linear(x_t))
+
+which trains via ``jax.lax.associative_scan`` (log-depth, parallel over T —
+the TPU-native analogue of the paper's custom linear-scan kernel) and decodes
+as an O(d) per-token step with a single vector state — this is what makes the
+``long_500k`` shape feasible for the hybrid family.
+
+Block layout (RecurrentGemma): norm → {conv1d → RG-LRU} ⊙ gelu-gate → out
+projection, with a gated-MLP sub-layer after every temporal block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .registry import ModelConfig
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_init_state", "rglru_decode_step"]
+
+
+def rglru_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    ks = jax.random.split(key, 8)
+    p = {
+        "norm": L.rmsnorm_init(d, dtype=dtype),
+        "w_x": L.dense_init(ks[0], d, dr, dtype=dtype),
+        "w_gate": L.dense_init(ks[1], d, dr, dtype=dtype),
+        "conv": L.causal_conv1d_init(ks[2], dr, cfg.conv_width, dtype=dtype),
+        "w_i": L.dense_init(ks[3], dr, dr, dtype=dtype, scale=0.02),
+        "b_i": jnp.zeros((dr,), dtype),
+        "w_r": L.dense_init(ks[4], dr, dr, dtype=dtype, scale=0.02),
+        "b_r": jnp.zeros((dr,), dtype),
+        # Λ init so that a^c = exp(−c·softplus(Λ)) spreads over (0.9, 0.999).
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (dr,), jnp.float32, -4.6, -2.0), dtype
+        ),
+        "w_out": L.dense_init(ks[6], dr, d, dtype=dtype),
+        # MLP sub-layer
+        "mlp_norm": L.rmsnorm_init(d, dtype=dtype),
+        "mlp": L.mlp_init(ks[7], d, cfg.d_ff, gated=True, dtype=dtype),
+    }
+    return p
+
+
+def _gates(p, xc, cfg: ModelConfig):
+    """log_a (f32) and normalized gated input from the conv output xc."""
+    compute_dtype = xc.dtype
+    i_t = jax.nn.sigmoid(xc @ p["w_i"].astype(compute_dtype) + p["b_i"].astype(compute_dtype))
+    r_t = jax.nn.sigmoid(xc @ p["w_r"].astype(compute_dtype) + p["b_r"].astype(compute_dtype))
+    log_a = (
+        -cfg.rglru_c
+        * r_t.astype(jnp.float32)
+        * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, ...]
+    )
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    u = beta * (i_t.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, u
+
+
+def _mlp_sublayer(p, x, cfg: ModelConfig, compute_dtype):
+    xn = L.rmsnorm(x, p["mlp_norm"], eps=cfg.rms_eps)
+    return x + L.mlp_apply(p["mlp"], xn, act="gelu_glu", compute_dtype=compute_dtype).astype(x.dtype)
+
+
+def rglru_apply(p, x, cfg: ModelConfig):
+    """Training / prefill forward via associative scan.  x: (B, T, d)."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    B, T, d = x.shape
+    xn = L.rmsnorm(x, p["norm"], eps=cfg.rms_eps).astype(compute_dtype)
+    xb = xn @ p["w_x"].astype(compute_dtype)
+    xc = L.causal_conv1d(p["conv"], xb)
+    a, u = _gates(p, xc, cfg)  # (B, T, dr) f32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(compute_dtype))
+    out = (h.astype(compute_dtype) * gate) @ p["w_out"].astype(compute_dtype)
+    x = x + out.astype(x.dtype)
+    return _mlp_sublayer(p, x, cfg, compute_dtype)
+
+
+def rglru_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    dr = cfg.d_rnn or cfg.d_model
+    return {
+        "h": jnp.zeros((B, dr), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def rglru_decode_step(p, state, x_t, cfg: ModelConfig):
+    """x_t: (B, 1, d) → (out, new state).  O(d_rnn) per token."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    B = x_t.shape[0]
+    xn = L.rmsnorm(x_t, p["norm"], eps=cfg.rms_eps).astype(compute_dtype)
+    xb = (xn @ p["w_x"].astype(compute_dtype))[:, 0, :]
+    new_conv, xc = L.causal_conv1d_step(p["conv"], state["conv"], xb)
+    a, u = _gates(p, xc, cfg)
+    h = a * state["h"] + u
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(compute_dtype))[:, 0, :]
+    out = (h.astype(compute_dtype) * gate) @ p["w_out"].astype(compute_dtype)
+    x = x_t + out.astype(x_t.dtype)[:, None, :]
+    x = _mlp_sublayer(p, x, cfg, compute_dtype)
+    return x, {"h": h, "conv": new_conv}

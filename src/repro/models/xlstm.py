@@ -1,0 +1,336 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential), following Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM training uses the *chunkwise* form: a `lax.scan` over T/chunk steps
+carrying the stabilized state (C, n, m); within a chunk the computation is a
+(chunk × chunk) masked matmul (MXU-friendly) plus state-correction terms.
+Cost is O(T·chunk·dh + T·dh²) — sub-quadratic in T for fixed chunk — and the
+recurrent *step* form used at decode is O(dh²) per token with no KV cache,
+which is what makes the ``long_500k`` shape feasible for this family.
+
+sLSTM has a true nonlinear recurrence (hidden state feeds the gates through
+block-diagonal per-head matrices) and cannot be parallelized over time; it is
+a `lax.scan` over T (one compact while-loop in HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .registry import ModelConfig
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_init_state",
+    "mlstm_decode_step",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_init_state",
+    "slstm_decode_step",
+]
+
+# --------------------------------------------------------------------- mLSTM
+
+
+def mlstm_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "norm": L.rmsnorm_init(d, dtype=dtype),
+        "w_up": L.dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv": L.causal_conv1d_init(ks[1], di, cfg.conv_width, dtype=dtype),
+        "wq": L.dense_init(ks[2], di, di, dtype=dtype),
+        "wk": L.dense_init(ks[3], di, di, dtype=dtype),
+        "wv": L.dense_init(ks[4], di, di, dtype=dtype),
+        "w_i": L.dense_init(ks[5], di, H, dtype=dtype, scale=0.02),
+        "b_i": jnp.zeros((H,), dtype),
+        "w_f": L.dense_init(ks[6], di, H, dtype=dtype, scale=0.02),
+        "b_f": jnp.full((H,), 3.0, dtype),  # open forget gates at init
+        "hnorm": L.rmsnorm_init(di, dtype=dtype),
+        "w_down": L.dense_init(ks[7], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int):
+    """Stabilized chunkwise mLSTM cell.
+
+    q,k,v: (B, H, T, dh); log_i/log_f: (B, H, T).  Returns h (B, H, T, dh).
+    """
+    B, H, T, dh = q.shape
+    nc = T // chunk
+    scale = dh**-0.5
+    qs = (q * scale).reshape(B, H, nc, chunk, dh)
+    ks_ = k.reshape(B, H, nc, chunk, dh)
+    vs = v.reshape(B, H, nc, chunk, dh)
+    li = log_i.reshape(B, H, nc, chunk)
+    lf = log_f.reshape(B, H, nc, chunk)
+    b = jnp.cumsum(lf, axis=-1)  # inclusive within-chunk decay
+    total = b[..., -1]  # (B, H, nc)
+    # Move the chunk axis to the front for scan.
+    qs, ks_, vs, li, b = (jnp.moveaxis(t, 2, 0) for t in (qs, ks_, vs, li, b))
+    total = jnp.moveaxis(total, 2, 0)  # (nc, B, H)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # τ' ≤ τ
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, bc, tot = inp
+        # Stabilizers.
+        g = ic - bc  # (B,H,c): i_τ' − b_τ'
+        gmax = jax.lax.cummax(g, axis=g.ndim - 1)  # running max over τ' ≤ τ
+        m_intra = bc + gmax
+        m_new = jnp.maximum(bc + m[..., None], m_intra)  # (B,H,c)
+        alpha = jnp.exp(bc + m[..., None] - m_new)  # inter-chunk coeff
+        # Intra-chunk masked weights  D_ττ' = exp(b_τ − b_τ' + i_τ' − m_τ).
+        logD = bc[..., :, None] - bc[..., None, :] + ic[..., None, :] - m_new[..., None]
+        D = jnp.where(tri, jnp.exp(logD), 0.0)  # (B,H,c,c)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc)  # (B,H,c,c)
+        num = jnp.einsum("bhqk,bhkd->bhqd", s * D, vc)
+        num = num + alpha[..., None] * jnp.einsum("bhqd,bhde->bhqe", qc, C)
+        den = jnp.einsum("bhqk,bhqk->bhq", s, D)  # Σ D·(q·k)
+        den = den + alpha * jnp.einsum("bhqd,bhd->bhq", qc, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # State update to chunk end.
+        m_next = jnp.maximum(tot + m, tot + gmax[..., -1])
+        w_in = jnp.exp(tot[..., None] - bc + ic - m_next[..., None])  # (B,H,c)
+        kw = kc * w_in[..., None]  # weight the keys FIRST — forcing the cheap
+        # contraction order (a 3-operand einsum here can materialize a
+        # (B,H,c,dh,dh) intermediate: ~TBs at dh=1024).
+        C = jnp.exp(tot + m - m_next)[..., None, None] * C + jnp.einsum(
+            "bhkd,bhke->bhde", kw, vc
+        )
+        n = jnp.exp(tot + m - m_next)[..., None] * n + jnp.sum(kw, axis=2)
+        return (C, n, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (qs.astype(jnp.float32), ks_.astype(jnp.float32), vs.astype(jnp.float32),
+         li.astype(jnp.float32), b.astype(jnp.float32), total.astype(jnp.float32)),
+    )
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, T, dh)
+    return h
+
+
+def _mlstm_pre(p, x, cfg: ModelConfig, conv_state=None):
+    """Shared projection path; returns per-head q,k,v,gates + gate branch."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    xn = L.rmsnorm(x, p["norm"], eps=cfg.rms_eps).astype(compute_dtype)
+    z = xn @ p["w_up"].astype(compute_dtype)
+    x_in, x_gate = z[..., :di], z[..., di:]
+    if conv_state is None:
+        c = jax.nn.silu(L.causal_conv1d(p["conv"], x_in))
+        new_conv = None
+    else:
+        new_conv, c1 = L.causal_conv1d_step(p["conv"], conv_state, x_in[:, 0, :])
+        c = jax.nn.silu(c1)[:, None, :]
+    q = c @ p["wq"].astype(compute_dtype)
+    k = c @ p["wk"].astype(compute_dtype)
+    v = x_in @ p["wv"].astype(compute_dtype)
+    log_i = (c @ p["w_i"].astype(compute_dtype) + p["b_i"].astype(compute_dtype))
+    log_f = jax.nn.log_sigmoid(
+        (c @ p["w_f"].astype(compute_dtype) + p["b_f"].astype(compute_dtype)).astype(jnp.float32)
+    )
+    B, T = x.shape[:2]
+    dh = di // H
+    to_heads = lambda t: t.reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    return (
+        to_heads(q), to_heads(k), to_heads(v),
+        log_i.astype(jnp.float32).transpose(0, 2, 1),  # (B, H, T)
+        log_f.transpose(0, 2, 1),
+        x_gate, new_conv,
+    )
+
+
+def _mlstm_post(p, h_heads, x, x_gate, cfg: ModelConfig):
+    """Per-head norm → gate → down-projection → residual."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    B, H, T, dh = h_heads.shape
+    h = h_heads.transpose(0, 2, 1, 3).reshape(B, T, H * dh)
+    h = L.rmsnorm(h.astype(compute_dtype), p["hnorm"], eps=cfg.rms_eps)
+    h = h * jax.nn.silu(x_gate)
+    out = h @ p["w_down"].astype(compute_dtype)
+    return x + out.astype(x.dtype)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, *, chunk: int = 256):
+    q, k, v, log_i, log_f, x_gate, _ = _mlstm_pre(p, x, cfg)
+    T = x.shape[1]
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    h = _mlstm_chunkwise(q, k, v, log_i, log_f, chunk=max(chunk, 1))
+    return _mlstm_post(p, h.astype(x.dtype), x, x_gate, cfg)
+
+
+def mlstm_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H, dh = cfg.n_heads, int(cfg.mlstm_proj_factor * d) // cfg.n_heads
+    return {
+        "C": jnp.zeros((B, H, dh, dh), dtype),
+        "n": jnp.zeros((B, H, dh), dtype),
+        "m": jnp.zeros((B, H), dtype),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_decode_step(p, state, x_t, cfg: ModelConfig):
+    """x_t: (B, 1, d) → (out (B, 1, d), new state).  O(dh²), no KV cache."""
+    q, k, v, log_i, log_f, x_gate, new_conv = _mlstm_pre(
+        p, x_t, cfg, conv_state=state["conv"]
+    )
+    qs = (q[:, :, 0].astype(jnp.float32)) * (q.shape[-1] ** -0.5)  # (B,H,dh)
+    kc = k[:, :, 0].astype(jnp.float32)
+    vc = v[:, :, 0].astype(jnp.float32)
+    li = log_i[:, :, 0]
+    lf = log_f[:, :, 0]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    decay = jnp.exp(lf + m - m_new)
+    inject = jnp.exp(li - m_new)
+    C = decay[..., None, None] * C + inject[..., None, None] * (
+        kc[..., :, None] * vc[..., None, :]
+    )
+    n = decay[..., None] * n + inject[..., None] * kc
+    num = jnp.einsum("bhd,bhde->bhe", qs, C)
+    den = jnp.einsum("bhd,bhd->bh", qs, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]  # (B,H,dh)
+    out = _mlstm_post(p, h[:, :, None, :].astype(x_t.dtype), x_t, x_gate, cfg)
+    return out, {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+
+def slstm_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 12)
+    p = {"norm": L.rmsnorm_init(d, dtype=dtype)}
+    for gi, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = L.dense_init(ks[gi], d, d, dtype=dtype, scale=0.02 if g in ("i", "f") else None)
+        p[f"r_{g}"] = (
+            jax.random.normal(ks[4 + gi], (H, dh, dh), dtype) / np.sqrt(dh) * 0.5
+        ).astype(dtype)
+        p[f"b_{g}"] = (jnp.full((d,), 3.0, dtype) if g == "f" else jnp.zeros((d,), dtype))
+    p["hnorm"] = L.rmsnorm_init(d, dtype=dtype)
+    p["w_out"] = L.dense_init(ks[8], d, d, dtype=dtype)
+    d_ff = int(cfg.slstm_proj_factor * d)
+    p["ffn_norm"] = L.rmsnorm_init(d, dtype=dtype)
+    p["ffn"] = L.mlp_init(ks[9], d, d_ff, gated=True, dtype=dtype)
+    return p
+
+
+def _slstm_cell(p, x_pre, state, H: int):
+    """One time step.  x_pre: dict gate → (B, d) input projections."""
+    h, c, n, m = state  # h,c,n: (B, H, dh); m: (B, H, dh)
+    B = h.shape[0]
+    dh = h.shape[-1]
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", h, p[f"r_{g}"].astype(h.dtype))
+
+    shape = (B, H, dh)
+    pre = {g: x_pre[g].reshape(shape) + rec(g) for g in ("z", "i", "f", "o")}
+    z = jnp.tanh(pre["z"])
+    o = jax.nn.sigmoid(pre["o"])
+    log_i = pre["i"]
+    log_f = jax.nn.log_sigmoid(pre["f"])
+    m_new = jnp.maximum(log_f + m, log_i)
+    decay = jnp.exp(log_f + m - m_new)
+    inject = jnp.exp(log_i - m_new)
+    c = decay * c + inject * z
+    n = decay * n + inject
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return h_new, c, n, m_new
+
+
+def slstm_apply(p, x, cfg: ModelConfig, ctx=None):
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+
+    def constrain_heads(t):
+        """Force the head axis onto the model mesh axis (when it divides):
+        the recurrence then runs shard-local — without this GSPMD shards the
+        hidden on dh and all-reduces EVERY time step (§Perf iteration B3)."""
+        if ctx is None or ctx.mesh is None or ctx.model_axis is None:
+            return t
+        msize = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get(
+            ctx.model_axis, 1
+        )
+        if msize <= 1 or H % msize != 0:
+            return t
+        import jax as _jax
+        from jax.sharding import NamedSharding, PartitionSpec as _P
+
+        spec = [None] * t.ndim
+        for i, dim in enumerate(t.shape):
+            if dim == H:
+                spec[i] = ctx.model_axis
+                break
+        return _jax.lax.with_sharding_constraint(
+            t, NamedSharding(ctx.mesh, _P(*spec))
+        )
+
+    xn = L.rmsnorm(x, p["norm"], eps=cfg.rms_eps).astype(compute_dtype)
+    pre = {
+        g: (xn @ p[f"w_{g}"].astype(compute_dtype) + p[f"b_{g}"].astype(compute_dtype)).astype(jnp.float32)
+        for g in ("z", "i", "f", "o")
+    }
+    pre = {g: pre[g].transpose(1, 0, 2).reshape(T, B, H, dh) for g in pre}
+
+    def step(state, t_pre):
+        h, c, n, m = _slstm_cell(p, t_pre, state, H)
+        return (h, c, n, m), h
+
+    # Constrain only the CARRY: a replicated carry makes GSPMD all-reduce the
+    # recurrence every step; head-sharding it keeps the loop body local while
+    # the (T, …) gate tensors keep their producer sharding (§Perf B3').
+    z0 = constrain_heads(jnp.zeros((B, H, dh), jnp.float32))
+    (_, _, _, _), hs = jax.lax.scan(step, (z0, z0, z0, z0), pre)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, d)  # (B, T, d)
+    h = L.rmsnorm(h.astype(compute_dtype), p["hnorm"], eps=cfg.rms_eps)
+    x = x + (h @ p["w_out"].astype(compute_dtype)).astype(x.dtype)
+    # Post-FFN (proj factor 4/3, gated).
+    xn2 = L.rmsnorm(x, p["ffn_norm"], eps=cfg.rms_eps)
+    x = x + L.mlp_apply(p["ffn"], xn2, act="gelu_glu", compute_dtype=compute_dtype).astype(x.dtype)
+    return x
+
+
+def slstm_init_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((B, H, dh), dtype)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode_step(p, state, x_t, cfg: ModelConfig):
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    xn = L.rmsnorm(x_t[:, 0, :], p["norm"], eps=cfg.rms_eps).astype(compute_dtype)
+    pre = {
+        g: (xn @ p[f"w_{g}"].astype(compute_dtype) + p[f"b_{g}"].astype(compute_dtype)).astype(jnp.float32)
+        for g in ("z", "i", "f", "o")
+    }
+    h, c, n, m = _slstm_cell(p, pre, (state["h"], state["c"], state["n"], state["m"]), H)
+    d = cfg.d_model
+    hv = L.rmsnorm(h.reshape(B, d).astype(compute_dtype), p["hnorm"], eps=cfg.rms_eps)
+    x = x_t + (hv @ p["w_out"].astype(compute_dtype)).astype(x_t.dtype)[:, None, :]
+    xn2 = L.rmsnorm(x, p["ffn_norm"], eps=cfg.rms_eps)
+    x = x + L.mlp_apply(p["ffn"], xn2, act="gelu_glu", compute_dtype=compute_dtype).astype(x.dtype)
+    return x, {"h": h, "c": c, "n": n, "m": m}

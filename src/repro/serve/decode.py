@@ -1,0 +1,81 @@
+"""Serving entry points: batched prefill + single-token decode steps.
+
+These are the functions the decode/long-context dry-run cells lower, and the
+loop drivers used by the serving example (greedy/temperature sampling over a
+batch of requests with a shared-step KV/recurrent cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.registry import ModelConfig
+
+__all__ = ["make_prefill_fn", "make_decode_fn", "greedy_generate"]
+
+
+def make_prefill_fn(cfg: ModelConfig, ctx: T.ModelContext):
+    def prefill_fn(params, batch):
+        return T.prefill(params, batch, cfg, ctx)
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, ctx: T.ModelContext):
+    def decode_fn(params, cache, tokens_t, cur_len):
+        return T.decode_step(params, cache, tokens_t, cur_len, cfg, ctx)
+
+    return decode_fn
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt_tokens,
+    *,
+    steps: int,
+    max_len: Optional[int] = None,
+    ctx: Optional[T.ModelContext] = None,
+    temperature: float = 0.0,
+    key=None,
+):
+    """Decode ``steps`` tokens after teacher-forcing the prompt through the
+    decode path (token-by-token; exercises exactly the serve_step graph).
+
+    prompt_tokens: (B, T₀) — or (B, K, T₀) for codebook models.
+    Returns (B, steps) generated ids (first codebook for codebook models).
+    """
+    ctx = ctx or T.ModelContext()
+    codebooks = cfg.num_codebooks > 0
+    B = prompt_tokens.shape[0]
+    T0 = prompt_tokens.shape[-1]
+    max_len = max_len or (T0 + steps)
+    cache = T.init_cache(cfg, B, max_len)
+    decode = jax.jit(make_decode_fn(cfg, ctx))
+
+    logits = None
+    for t in range(T0):
+        tok = prompt_tokens[..., t : t + 1]
+        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
+
+    outs = []
+    cur = jnp.asarray(T0, jnp.int32)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    for s in range(steps):
+        lg = logits[:, -1]  # (B, V) or (B, K, V) for codebook models
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        tok = nxt[..., None].astype(jnp.int32)
+        if codebooks:
+            tok = nxt.astype(jnp.int32)[..., None]  # (B, K, 1)
+        outs.append(nxt if not codebooks else nxt[:, 0])
+        logits, cache = decode(params, cache, tok, cur + s)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,79 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Int8 block quantization: each leaf is quantized per-row (last-dim blocks)
+with an f32 scale; the *dequantized* value is what enters the optimizer (and,
+on a real deployment, the cross-DCN all-reduce — 4× wire reduction for the
+``pod`` axis).  The quantization residual is carried in an error-feedback
+buffer and re-injected next step, which is what keeps SGD/Adam convergence
+unharmed (Karimireddy et al., 2019).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CompressionConfig",
+    "init_ef_state",
+    "quantize_int8",
+    "dequantize_int8",
+    "compress_with_error_feedback",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = True
+    block: int = 256  # quantization block along the trailing dim
+
+
+def init_ef_state(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def _blocked(x, block: int):
+    n = x.shape[-1]
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return xp.reshape(x.shape[:-1] + (-1, block)), n, pad
+
+
+def quantize_int8(x, block: int = 256):
+    """Returns (q int8, scales f32) with per-block scales."""
+    xb, n, pad = _blocked(x.astype(jnp.float32), block)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize_int8(q, scale, n: int):
+    x = q.astype(jnp.float32) * scale
+    return x.reshape(x.shape[:-2] + (-1,))[..., :n]
+
+
+def compress_with_error_feedback(cfg: CompressionConfig, grads, ef):
+    """g ← Q(g + e);  e ← (g + e) − Q(g + e).  Applied leaf-wise."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(-1) if g32.ndim == 0 else g32
+        if flat.ndim == 0:
+            return g32.astype(g.dtype), jnp.zeros_like(g32)
+        q, s, n = quantize_int8(flat, cfg.block)
+        deq = dequantize_int8(q, s, n).reshape(g32.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

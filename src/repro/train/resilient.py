@@ -1,0 +1,118 @@
+"""Straggler-resilient data-parallel training — the paper's technique
+promoted to a first-class training-loop feature (beyond-paper application of
+Lemma 3; see DESIGN.md §2).
+
+A :class:`RedundantShardPlan` assigns ``n_shards`` data shards to ``G``
+DP groups by an assignment matrix with Property 1 (each group processes
+``ℓ`` shards per step — that is the redundancy the paper trades for
+resilience).  Each step:
+
+1. a straggler mask over groups arrives (deadline-based on real clusters,
+   simulated here);
+2. the recovery solver produces ``b`` (zeros at stragglers), cached per
+   alive-pattern;
+3. ``b`` is fed to the model's ``loss_fn`` as ``group_weights`` — making the
+   backward pass compute exactly  Σ_g b_g ∇L_g = Σ_s a_s ∇L_s  with
+   ``a_s ∈ [1, 1+δ]``: an approximately-uniformly-reweighted full-data
+   gradient, for ANY straggler pattern the assignment tolerates.
+
+With the fractional-repetition assignment the band is exact (δ = 0) whenever
+at least one replica of every shard survives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.assignment import (
+    Assignment,
+    bernoulli_assignment,
+    cyclic_assignment,
+    fractional_repetition_assignment,
+    singleton_assignment,
+)
+from ..core.recovery import RecoveryResult, solve_recovery
+
+__all__ = ["RedundantShardPlan", "make_plan"]
+
+
+@dataclasses.dataclass
+class RedundantShardPlan:
+    """Shard→group assignment with cached per-pattern recovery weights."""
+
+    assignment: Assignment
+    num_groups: int
+    shards_per_group: int  # uniform load ℓ·n/G (balanced constructions only)
+
+    def __post_init__(self):
+        self._cache: dict[bytes, RecoveryResult] = {}
+        loads = self.assignment.matrix.sum(axis=1)
+        if not (loads == loads[0]).all():
+            raise ValueError(
+                "training plans need load-balanced assignments (cyclic/FR); "
+                f"got loads {loads}"
+            )
+
+    @property
+    def num_shards(self) -> int:
+        return self.assignment.num_shards
+
+    def group_shards(self, g: int) -> np.ndarray:
+        """Shard ids processed by group g (sorted, fixed for the run)."""
+        return self.assignment.shards_of(g)
+
+    def recovery(self, alive: np.ndarray) -> RecoveryResult:
+        alive = np.asarray(alive, dtype=bool)
+        key = alive.tobytes()
+        if key not in self._cache:
+            self._cache[key] = solve_recovery(self.assignment, alive)
+        return self._cache[key]
+
+    def group_weights(self, alive: np.ndarray) -> tuple[np.ndarray, RecoveryResult]:
+        """(G,) float32 weights (b, zeros at stragglers) + diagnostics."""
+        res = self.recovery(alive)
+        return res.b_full.astype(np.float32), res
+
+    def degraded_weights(self, alive: np.ndarray) -> np.ndarray:
+        """Fallback when Property 1 fails (too many dead groups): use the
+        best-effort covered-shard weights — training continues on the
+        surviving information (elastic path)."""
+        res = self.recovery(alive)
+        return res.b_full.astype(np.float32)
+
+
+def make_plan(
+    num_groups: int,
+    num_shards: int,
+    *,
+    redundancy: int = 2,
+    scheme: str = "cyclic",
+    rng: Optional[np.random.Generator] = None,
+) -> RedundantShardPlan:
+    """Build a load-balanced redundant plan.
+
+    scheme ∈ {"cyclic", "fr", "bernoulli", "singleton"}.  ``redundancy`` is
+    the per-shard replication ℓ (ℓ=1 ⇒ no resilience, the baseline).
+    """
+    if scheme == "cyclic":
+        a = cyclic_assignment(num_shards, num_groups, redundancy)
+    elif scheme == "fr":
+        a = fractional_repetition_assignment(num_shards, num_groups, redundancy)
+    elif scheme == "bernoulli":
+        # Bernoulli is not exactly load-balanced; regularize by using cyclic
+        # with the Theorem-6 ℓ instead when balance is required.
+        raise ValueError(
+            "bernoulli assignments are not load-balanced; use 'cyclic' with "
+            "ell from theorem6_ell for the randomized regime"
+        )
+    elif scheme == "singleton":
+        a = singleton_assignment(num_shards, num_groups)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    loads = a.matrix.sum(axis=1)
+    return RedundantShardPlan(
+        assignment=a, num_groups=num_groups, shards_per_group=int(loads[0])
+    )

@@ -1,0 +1,137 @@
+"""The training loop: redundant pipeline + deadline straggling + recovery
+weighting + checkpoint/restart.  This is the host-side orchestration that a
+real cluster's per-step control plane would run."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.stragglers import DeadlineStragglerSimulator
+from ..data.pipeline import RedundantDataPipeline
+from ..models import transformer as T
+from ..models.registry import ModelConfig
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .compression import CompressionConfig
+from .elastic import ElasticGroupManager
+from .optimizer import AdamWConfig
+from .resilient import make_plan
+from .train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_groups: int = 8
+    num_shards: int = 8
+    redundancy: int = 2
+    scheme: str = "cyclic"
+    microbatch: int = 2
+    seq_len: int = 128
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    seed: int = 0
+    simulate_stragglers: bool = True
+    straggler_deadline: float = 2.0
+    compression: Optional[CompressionConfig] = None
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        opt_cfg: Optional[AdamWConfig] = None,
+        ctx: Optional[T.ModelContext] = None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or AdamWConfig(total_steps=tcfg.steps)
+        self.ctx = ctx or T.ModelContext()
+        plan = make_plan(
+            tcfg.num_groups, tcfg.num_shards,
+            redundancy=tcfg.redundancy, scheme=tcfg.scheme,
+        )
+        self.elastic = ElasticGroupManager(plan)
+        self.pipeline = RedundantDataPipeline(
+            plan, vocab=cfg.vocab, microbatch=tcfg.microbatch,
+            seq_len=tcfg.seq_len, seed=tcfg.seed,
+        )
+        self.straggler_sim = DeadlineStragglerSimulator(
+            num_nodes=tcfg.num_groups, deadline=tcfg.straggler_deadline,
+            seed=tcfg.seed + 1,
+        )
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.ctx, self.opt_cfg, compression=tcfg.compression)
+        )
+        self.history: list[dict] = []
+
+    # -------------------------------------------------------------- state
+
+    def init_state(self) -> tuple[TrainState, int]:
+        """Fresh state, or resume from the newest checkpoint if one exists."""
+        state = init_train_state(
+            jax.random.PRNGKey(self.tcfg.seed), self.cfg,
+            compression=self.tcfg.compression,
+        )
+        start = 0
+        if self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None:
+            state, start = restore_checkpoint(self.tcfg.ckpt_dir, state)
+        return state, start
+
+    # -------------------------------------------------------------- loop
+
+    def run(
+        self,
+        state: Optional[TrainState] = None,
+        *,
+        start_step: Optional[int] = None,
+        on_step: Optional[Callable[[int, dict], None]] = None,
+    ) -> TrainState:
+        if state is None:
+            state, resumed = self.init_state()
+            start_step = resumed if start_step is None else start_step
+        start_step = start_step or 0
+        for step in range(start_step, self.tcfg.steps):
+            if self.tcfg.simulate_stragglers:
+                alive_t, latencies = self.straggler_sim.step()
+            else:
+                alive_t = np.ones(self.tcfg.num_groups, dtype=bool)
+                latencies = np.zeros(self.tcfg.num_groups)
+            weights, rec = self.elastic.step_weights(~alive_t)
+            if not weights.any():  # every group straggled: skip the step
+                self.history.append({"step": step, "skipped": True})
+                continue
+            batch = {
+                "tokens": jnp.asarray(self.pipeline.batch(step)),
+                "group_weights": jnp.asarray(weights),
+            }
+            state, metrics = self._step_fn(state, batch)
+            record = {
+                "step": step,
+                "loss": float(metrics["loss"]),
+                "ce": float(metrics["ce"]),
+                "grad_norm": float(metrics["grad_norm"]),
+                "stragglers": int((~alive_t).sum()),
+                "delta": float(rec.delta) if np.isfinite(rec.delta) else -1.0,
+                "covered": float(rec.covered_fraction),
+            }
+            self.history.append(record)
+            if on_step:
+                on_step(step, record)
+            if (
+                self.tcfg.ckpt_dir
+                and (step + 1) % self.tcfg.ckpt_every == 0
+            ):
+                save_checkpoint(
+                    self.tcfg.ckpt_dir, step + 1, state, keep=self.tcfg.ckpt_keep
+                )
+        return state

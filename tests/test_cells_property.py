@@ -1,0 +1,138 @@
+"""Property tests on the recurrent cells and robust aggregation.
+
+These pin down the numerical invariants the dry-run cells rely on:
+chunk-size invariance of the chunkwise mLSTM, associative-scan vs sequential
+equivalence of RG-LRU, and the byzantine robustness of median-of-means
+(paper §5 future-work direction, implemented as an optional aggregator)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import mom_combine, resilient_sum
+from repro.models import xlstm as X
+from repro.models import rglru as G
+from tests.test_models_smoke import smoke_cfg
+
+
+# ------------------------------------------------------------------ mLSTM
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_mlstm_chunk_size_invariance(chunk):
+    """The chunkwise cell must give the same answer for every chunk size —
+    the chunking is purely a compute schedule."""
+    rng = np.random.default_rng(0)
+    B, H, T, dh = 2, 2, 32, 8
+    q = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    li = jnp.asarray(rng.normal(size=(B, H, T)), jnp.float32)
+    lf = jnp.asarray(rng.normal(size=(B, H, T)) - 1.0, jnp.float32)
+    ref = X._mlstm_chunkwise(q, k, v, li, lf, chunk=T)  # single chunk = exact parallel form
+    got = X._mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunkwise_matches_stepwise_recurrence():
+    """Chunkwise (train) vs the pure sequential recurrence (decode form)."""
+    rng = np.random.default_rng(1)
+    B, H, T, dh = 1, 2, 24, 4
+    q = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+    li = jnp.asarray(rng.normal(size=(B, H, T)), jnp.float32)
+    lf = jnp.asarray(rng.normal(size=(B, H, T)) - 1.0, jnp.float32)
+    par = X._mlstm_chunkwise(q, k, v, li, lf, chunk=8)
+    # Sequential stabilized recurrence.
+    scale = dh**-0.5
+    C = np.zeros((B, H, dh, dh))
+    n = np.zeros((B, H, dh))
+    m = np.zeros((B, H))
+    outs = []
+    for t in range(T):
+        m_new = np.maximum(np.asarray(lf[:, :, t]) + m, np.asarray(li[:, :, t]))
+        decay = np.exp(np.asarray(lf[:, :, t]) + m - m_new)
+        inject = np.exp(np.asarray(li[:, :, t]) - m_new)
+        kt = np.asarray(k[:, :, t])
+        vt = np.asarray(v[:, :, t])
+        C = decay[..., None, None] * C + inject[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = decay[..., None] * n + inject[..., None] * kt
+        qt = np.asarray(q[:, :, t]) * scale
+        num = np.einsum("bhd,bhde->bhe", qt, C)
+        den = np.einsum("bhd,bhd->bh", qt, n)
+        h = num / np.maximum(np.abs(den), np.exp(-m_new))[..., None]
+        outs.append(h)
+        m = m_new
+    seq = np.stack(outs, axis=2)  # (B, H, T, dh)
+    np.testing.assert_allclose(np.asarray(par), seq, rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------------------------------ RG-LRU
+
+
+def test_rglru_associative_scan_matches_sequential():
+    rng = np.random.default_rng(2)
+    B, T, d = 2, 40, 8
+    a = jnp.asarray(rng.uniform(0.7, 0.99, size=(B, T, d)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h_par = jax.lax.associative_scan(combine, (a, u), axis=1)
+    h = np.zeros((B, d))
+    outs = []
+    for t in range(T):
+        h = np.asarray(a[:, t]) * h + np.asarray(u[:, t])
+        outs.append(h.copy())
+    np.testing.assert_allclose(
+        np.asarray(h_par), np.stack(outs, axis=1), rtol=2e-5, atol=2e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_rglru_gate_bounds_property(seed):
+    """RG-LRU decay a_t ∈ (0, 1): the recurrence is a strict contraction, so
+    the hidden state stays bounded by max|u|/(1−max a) — no blowups at 500k
+    steps (the long_500k cell's stability argument)."""
+    rng = np.random.default_rng(seed)
+    cfg = smoke_cfg("recurrentgemma-9b")
+    p = G.rglru_init(jax.random.PRNGKey(seed), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_rnn or cfg.d_model)), jnp.float32)
+    a, u = G._gates(p, x[:, :, : cfg.d_rnn or cfg.d_model].astype(jnp.float32), cfg)
+    assert float(a.min()) > 0.0 and float(a.max()) < 1.0
+    assert np.isfinite(np.asarray(u)).all()
+
+
+# ---------------------------------------------------------------- byzantine
+
+
+def test_mom_combine_resists_corrupted_nodes():
+    """Median-of-means (paper §5): a single byzantine node sending 1e6-scale
+    garbage corrupts the Lemma-3 weighted sum but not the MoM combine."""
+    rng = np.random.default_rng(3)
+    s, dim = 10, 6
+    true = rng.normal(size=(dim,))
+    stats = np.stack([true + 0.01 * rng.normal(size=dim) for _ in range(s)])
+    corrupted = stats.copy()
+    corrupted[3] = 1e6
+    b = np.ones(s)
+    naive = np.asarray(resilient_sum(jnp.asarray(corrupted), b)) / s
+    robust = np.asarray(mom_combine(jnp.asarray(corrupted), num_groups=5)) / s
+    assert np.abs(naive - true).max() > 1e3  # naive combine destroyed
+    assert np.abs(robust - true).max() < 1.0  # MoM survives
+
+
+def test_mom_combine_unbiased_without_corruption():
+    rng = np.random.default_rng(4)
+    stats = jnp.asarray(rng.normal(loc=2.0, size=(20, 5)), jnp.float32)
+    out = np.asarray(mom_combine(stats, num_groups=4)) / 20
+    np.testing.assert_allclose(out, np.asarray(stats).mean(0), rtol=0.3, atol=0.3)
