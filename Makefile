@@ -1,0 +1,19 @@
+# Repo entry points.  Tier-1 is wrapped in a hard 300 s timeout so the
+# "suite silently hangs for minutes" regression class fails loudly in CI
+# (pytest-timeout, when installed via the `test` extra, adds per-test limits).
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test test-all bench-kernels bench
+
+test:  ## tier-1: fast suite, fails after 300 s
+	timeout 300 $(PY) -m pytest -x -q
+
+test-all:  ## everything, including compile-heavy slow-marked smoke tests
+	timeout 900 $(PY) -m pytest -q -m ""
+
+bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
+	$(PY) -m benchmarks.run kernels --emit BENCH_kernels.json
+
+bench:  ## full benchmark sweep
+	$(PY) -m benchmarks.run

@@ -6,6 +6,7 @@ when present.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig1 kernels
+    PYTHONPATH=src python -m benchmarks.run kernels --emit BENCH_kernels.json
 """
 
 from __future__ import annotations
@@ -52,15 +53,36 @@ def summarize_dryrun(path: str = "results/dryrun.jsonl") -> None:
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    argv = sys.argv[1:]
+    emit_path = None
+    if "--emit" in argv:
+        i = argv.index("--emit")
+        if i + 1 >= len(argv):
+            sys.exit("error: --emit requires an output path (e.g. --emit BENCH_kernels.json)")
+        emit_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2 :]
+    names = argv or list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         if n == "dryrun":
             summarize_dryrun()
             continue
         BENCHES[n]()
-    if not sys.argv[1:]:
+    if not argv:
         summarize_dryrun()
+    if emit_path is not None:
+        from .common import ROWS
+
+        with open(emit_path, "w") as f:
+            json.dump(
+                [
+                    {"name": name, "us_per_call": us, "derived": derived}
+                    for name, us, derived in ROWS
+                ],
+                f,
+                indent=2,
+            )
+        print(f"# wrote {len(ROWS)} rows to {emit_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

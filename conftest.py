@@ -1,0 +1,12 @@
+"""Root pytest config.
+
+Applies a per-test time limit when the optional pytest-timeout plugin (from
+the `test` extra) is installed — set here instead of an ini `timeout` key so
+environments without the plugin don't emit unknown-option warnings.  The
+Makefile's coreutils `timeout` wrapper remains the plugin-free backstop.
+"""
+
+
+def pytest_configure(config):
+    if config.pluginmanager.hasplugin("timeout") and not config.getoption("--timeout", None):
+        config.option.timeout = 120  # generous: slowest known test ≈ 86 s

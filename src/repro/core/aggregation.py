@@ -56,18 +56,28 @@ def resilient_psum(x: Any, my_weight, axis_name: str) -> Any:
 def mom_combine(per_node_stats: Any, num_groups: int = 5) -> Any:
     """Median-of-means combine (byzantine-robust aggregator, beyond paper).
 
-    Splits the node axis into ``num_groups`` buckets, averages within buckets,
-    takes the coordinate-wise median across buckets.  Robust to a minority of
-    arbitrarily-corrupted node statistics at the cost of the δ guarantee.
+    Splits the node axis round-robin into ``num_groups`` buckets (every row
+    used, bucket sizes within 1 of each other), averages within buckets, takes
+    the coordinate-wise median across buckets and rescales by the node count.
+    Robust to a minority of arbitrarily-corrupted node statistics at the cost
+    of the δ guarantee.
     """
 
     def combine(leaf):
         leaf = jnp.asarray(leaf)
         s = leaf.shape[0]
         g = max(1, min(num_groups, s))
-        usable = (s // g) * g
-        grouped = leaf[:usable].reshape((g, s // g) + leaf.shape[1:])
-        return jnp.median(jnp.mean(grouped, axis=1), axis=0) * s
+        # Round-robin bucketing: when s % g != 0 the leftover rows are spread
+        # across the first buckets (sizes differ by ≤ 1) instead of being
+        # dropped — dropping them while still scaling by s biases the sum
+        # estimate toward the surviving rows.
+        gid = jnp.arange(s) % g
+        sums = jax.ops.segment_sum(leaf.astype(jnp.float32), gid, num_segments=g)
+        counts = (s // g) + (jnp.arange(g) < s % g).astype(jnp.float32)
+        means = sums / counts.reshape((g,) + (1,) * (leaf.ndim - 1))
+        # Result stays float (like the pre-fix code): casting back to an
+        # integer leaf dtype would silently truncate fractional medians.
+        return jnp.median(means, axis=0) * s
 
     return jax.tree_util.tree_map(combine, per_node_stats)
 

@@ -32,7 +32,9 @@ class Coreset(NamedTuple):
     weights: jax.Array  # (m,)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "m", "squared", "bicriteria_iters"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "m", "squared", "bicriteria_iters", "impl")
+)
 def sensitivity_coreset(
     key,
     x,
@@ -42,20 +44,22 @@ def sensitivity_coreset(
     weights=None,
     squared: bool = True,
     bicriteria_iters: int = 5,
+    impl: str = "auto",
 ) -> Coreset:
     """Sensitivity-sampled ε-coreset of size ``m`` for k-means (squared=True)
-    or k-median (squared=False) cost."""
+    or k-median (squared=False) cost.  ``impl`` selects the kernel
+    implementation (repro.kernels.dispatch)."""
     n, d = x.shape
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     k_b = min(2 * k, n)  # bicriteria center count
     key_b, key_s = jax.random.split(key)
     bic = kmeans.lloyd(
-        key_b, x, k_b, weights=w, iters=bicriteria_iters, median=not squared
+        key_b, x, k_b, weights=w, iters=bicriteria_iters, median=not squared, impl=impl
     )
-    idx, d2 = pd.assign_min(x, bic.centers)
+    idx, d2 = pd.assign_min(x, bic.centers, impl=impl)
     dist = d2 if squared else jnp.sqrt(jnp.maximum(d2, 0.0))
     total = jnp.maximum(jnp.sum(w * dist), _EPS)
-    _, cluster_w = ss.weighted_segsum(x, w, idx, k_b)
+    _, cluster_w = ss.weighted_segsum(x, w, idx, k_b, impl=impl)
     sens = w * dist / total + w / jnp.maximum(cluster_w[idx], _EPS)
     sens = jnp.where(w > 0, sens, 0.0)  # padded rows never sampled
     p = sens / jnp.maximum(jnp.sum(sens), _EPS)

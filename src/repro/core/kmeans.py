@@ -32,42 +32,38 @@ class ClusteringResult(NamedTuple):
     cost: jax.Array  # scalar f32 — Σ w·d (median) or Σ w·d² (means)
 
 
-def _min_dist_sq(x, centers):
+def _min_dist_sq(x, centers, impl: str = "auto"):
     """(n,) squared distance to the nearest of the given centers."""
-    _, d2 = pd.assign_min(x, centers)
+    _, d2 = pd.assign_min(x, centers, impl=impl)
     return d2
 
 
-@functools.partial(jax.jit, static_argnames=("k", "median"))
-def plusplus_init(key, x, k: int, *, weights=None, median: bool = False):
+@functools.partial(jax.jit, static_argnames=("k", "median", "impl"))
+def plusplus_init(key, x, k: int, *, weights=None, median: bool = False, impl: str = "auto"):
     """Weighted k-means++ (d²-sampling) / k-median++ (d-sampling) seeding."""
     n, d = x.shape
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     key0, key = jax.random.split(key)
     first = jax.random.categorical(key0, jnp.log(jnp.maximum(w, _EPS)))
-    centers0 = jnp.zeros((k, d), x.dtype).at[0].set(x[first])
+    # All k rows start at the first chosen point, so unchosen slots coincide
+    # with a real center and can never distort the d-sampling distances
+    # (duplicate centers are harmless under a min).
+    centers0 = jnp.broadcast_to(x[first][None, :], (k, d)).astype(x.dtype)
 
     def body(i, carry):
         centers, key = carry
         key, sub = jax.random.split(key)
-        d2 = _min_dist_sq(x, centers)
-        # Un-chosen-yet centers sit at the origin; mask them out by distance
-        # to *chosen* centers only: recompute against first i rows is dynamic,
-        # so instead we track d2 against all k rows but rows ≥ i are zeros —
-        # that would corrupt the distances.  We therefore place unchosen
-        # centers at the first chosen point (duplicates are harmless).
+        d2 = _min_dist_sq(x, centers, impl)
         score = d2 if not median else jnp.sqrt(jnp.maximum(d2, 0.0))
         logits = jnp.log(jnp.maximum(w * score, _EPS))
         nxt = jax.random.categorical(sub, logits)
         return centers.at[i].set(x[nxt]), key
 
-    # Pre-fill all rows with the first center so unchosen slots never attract.
-    centers0 = jnp.broadcast_to(x[first][None, :], (k, d)).astype(x.dtype)
     centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
     return centers
 
 
-def _weiszfeld_update(x, w, idx, centers, *, iters: int = 4):
+def _weiszfeld_update(x, w, idx, centers, *, iters: int = 4, impl: str = "auto"):
     """Per-cluster weighted geometric median via Weiszfeld iterations."""
     k = centers.shape[0]
 
@@ -75,7 +71,7 @@ def _weiszfeld_update(x, w, idx, centers, *, iters: int = 4):
         # Distance of each point to ITS cluster's current estimate.
         d = jnp.sqrt(jnp.maximum(jnp.sum((x - c[idx]) ** 2, axis=1), _EPS))
         inv = w / d
-        sums, tot = ss.weighted_segsum(x, inv, idx, k)
+        sums, tot = ss.weighted_segsum(x, inv, idx, k, impl=impl)
         new = sums / jnp.maximum(tot, _EPS)[:, None]
         # Keep old estimate for empty clusters.
         return jnp.where((tot > _EPS)[:, None], new, c)
@@ -84,7 +80,7 @@ def _weiszfeld_update(x, w, idx, centers, *, iters: int = 4):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "iters", "median", "weiszfeld_iters")
+    jax.jit, static_argnames=("k", "iters", "median", "weiszfeld_iters", "impl")
 )
 def lloyd(
     key,
@@ -96,34 +92,41 @@ def lloyd(
     median: bool = False,
     weiszfeld_iters: int = 4,
     init_centers: Optional[jax.Array] = None,
+    impl: str = "auto",
 ) -> ClusteringResult:
-    """Weighted Lloyd iterations from a ++-seeding (or given centers)."""
+    """Weighted Lloyd iterations from a ++-seeding (or given centers).
+
+    ``impl`` selects the kernel implementation (see repro.kernels.dispatch)
+    for both the assignment and the centroid-update steps.
+    """
     n, d = x.shape
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     centers = (
-        plusplus_init(key, x, k, weights=w, median=median)
+        plusplus_init(key, x, k, weights=w, median=median, impl=impl)
         if init_centers is None
         else init_centers
     )
 
     def body(_, centers):
-        idx, _ = pd.assign_min(x, centers)
+        idx, _ = pd.assign_min(x, centers, impl=impl)
         if median:
-            return _weiszfeld_update(x, w, idx, centers, iters=weiszfeld_iters)
-        sums, tot = ss.weighted_segsum(x, w, idx, k)
+            return _weiszfeld_update(
+                x, w, idx, centers, iters=weiszfeld_iters, impl=impl
+            )
+        sums, tot = ss.weighted_segsum(x, w, idx, k, impl=impl)
         new = sums / jnp.maximum(tot, _EPS)[:, None]
         return jnp.where((tot > _EPS)[:, None], new, centers)
 
     centers = jax.lax.fori_loop(0, iters, body, centers)
-    idx, d2 = pd.assign_min(x, centers)
+    idx, d2 = pd.assign_min(x, centers, impl=impl)
     dist = jnp.sqrt(jnp.maximum(d2, 0.0)) if median else d2
     return ClusteringResult(centers=centers, assignment=idx, cost=jnp.sum(w * dist))
 
 
-@functools.partial(jax.jit, static_argnames=("median",))
-def clustering_cost(x, centers, *, weights=None, median: bool = False):
+@functools.partial(jax.jit, static_argnames=("median", "impl"))
+def clustering_cost(x, centers, *, weights=None, median: bool = False, impl: str = "auto"):
     """cost(P, C, w): Σ w·d(p, C) (median) or Σ w·d²(p, C) (means)."""
     w = jnp.ones((x.shape[0],), jnp.float32) if weights is None else weights
-    _, d2 = pd.assign_min(x, centers)
+    _, d2 = pd.assign_min(x, centers, impl=impl)
     dist = jnp.sqrt(jnp.maximum(d2, 0.0)) if median else d2
     return jnp.sum(w.astype(jnp.float32) * dist)

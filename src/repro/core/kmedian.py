@@ -67,20 +67,23 @@ def pack_local_shards(
     return xs, ws
 
 
-def local_cluster_batch(key, xs, ws, k: int, *, iters: int = 20, median: bool = True):
+def local_cluster_batch(
+    key, xs, ws, k: int, *, iters: int = 20, median: bool = True, impl: str = "auto"
+):
     """All workers' local clustering as one vmapped program.
 
     Returns (centers (s, k, d), center_weights (s, k)) where center weights
     are the weighted local cluster sizes (the paper's ``w_i(c)``).
+    ``impl`` selects the kernel implementation (repro.kernels.dispatch).
     """
     s = xs.shape[0]
     keys = jax.random.split(key, s)
 
     def one(key, x, w):
-        res = kmeans.lloyd(key, x, k, weights=w, iters=iters, median=median)
+        res = kmeans.lloyd(key, x, k, weights=w, iters=iters, median=median, impl=impl)
         from ..kernels.weighted_segsum import ops as ss
 
-        _, tot = ss.weighted_segsum(x, w, res.assignment, k)
+        _, tot = ss.weighted_segsum(x, w, res.assignment, k, impl=impl)
         return res.centers, tot
 
     return jax.vmap(one)(keys, jnp.asarray(xs), jnp.asarray(ws))
@@ -96,6 +99,7 @@ def resilient_kmedian(
     local_iters: int = 20,
     coord_iters: int = 40,
     seed: int = 0,
+    impl: str = "auto",
 ) -> ResilientClusteringOutput:
     """Paper Algorithm 1, end-to-end."""
     points = np.asarray(points, dtype=np.float32)
@@ -104,7 +108,7 @@ def resilient_kmedian(
 
     xs, ws = pack_local_shards(points, assignment)
     key = jax.random.PRNGKey(seed)
-    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters)
+    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters, impl=impl)
     centers_s = np.asarray(centers_s)
     wts_s = np.asarray(wts_s)
 
@@ -118,11 +122,13 @@ def resilient_kmedian(
     coord_key = jax.random.PRNGKey(seed + 1)
     res = kmeans.lloyd(
         coord_key, jnp.asarray(y), k, weights=jnp.asarray(wy),
-        iters=coord_iters, median=True,
+        iters=coord_iters, median=True, impl=impl,
     )
     centers = np.asarray(res.centers)
     full_cost = float(
-        kmeans.clustering_cost(jnp.asarray(points), jnp.asarray(centers), median=True)
+        kmeans.clustering_cost(
+            jnp.asarray(points), jnp.asarray(centers), median=True, impl=impl
+        )
     )
     return ResilientClusteringOutput(
         centers=centers, cost=full_cost, recovery=rec,
@@ -139,6 +145,7 @@ def ignore_stragglers_kmedian(
     local_iters: int = 20,
     coord_iters: int = 40,
     seed: int = 0,
+    impl: str = "auto",
 ) -> ResilientClusteringOutput:
     """The paper's Fig 1(b) baseline: no recovery weighting — alive workers'
     centers are combined as-is (b ≡ 1).  With a non-redundant assignment this
@@ -147,7 +154,7 @@ def ignore_stragglers_kmedian(
     alive = np.asarray(alive, dtype=bool)
     xs, ws = pack_local_shards(points, assignment)
     key = jax.random.PRNGKey(seed)
-    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters)
+    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters, impl=impl)
     centers_s = np.asarray(centers_s)
     wts_s = np.asarray(wts_s)
     ones = np.ones(assignment.num_nodes)
@@ -159,11 +166,13 @@ def ignore_stragglers_kmedian(
     )
     res = kmeans.lloyd(
         jax.random.PRNGKey(seed + 1), jnp.asarray(y), k,
-        weights=jnp.asarray(wy), iters=coord_iters, median=True,
+        weights=jnp.asarray(wy), iters=coord_iters, median=True, impl=impl,
     )
     centers = np.asarray(res.centers)
     full_cost = float(
-        kmeans.clustering_cost(jnp.asarray(points), jnp.asarray(centers), median=True)
+        kmeans.clustering_cost(
+            jnp.asarray(points), jnp.asarray(centers), median=True, impl=impl
+        )
     )
     from .recovery import lp_recovery
 

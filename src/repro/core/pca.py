@@ -22,6 +22,7 @@ import numpy as np
 from .assignment import Assignment
 from .kmedian import pack_local_shards
 from .recovery import RecoveryResult, solve_recovery
+from ..kernels import dispatch
 
 __all__ = [
     "relaxed_coreset_rank",
@@ -56,11 +57,44 @@ def local_relaxed_coresets(xs, r1: int):
     return jax.vmap(one)(xs)
 
 
-def pca_cost(x, basis):
-    """‖P − P·V·Vᵀ‖²_F for an orthonormal (d, r) basis V."""
-    x = jnp.asarray(x, jnp.float32)
+def _pca_cost_dense(x, basis):
     proj = x @ basis
     return jnp.sum(x * x) - jnp.sum(proj * proj)
+
+
+def _pca_cost_chunked(x, basis, *, bn: int = 4096):
+    """Streaming cost: scan row blocks so the ‖x‖² temp and the projection
+    are only ever materialized (bn, ·) at a time."""
+    n, d = x.shape
+    rem = (-n) % bn
+    if rem:
+        x = jnp.pad(x, ((0, rem), (0, 0)))  # zero rows contribute 0 to both terms
+
+    def body(acc, xb):
+        proj = xb @ basis
+        return acc + jnp.sum(xb * xb) - jnp.sum(proj * proj), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0), x.reshape(-1, bn, d)
+    )
+    return total
+
+
+dispatch.register_impl("pca_cost", "xla_ref", _pca_cost_dense)
+dispatch.register_impl("pca_cost", "xla_chunked", _pca_cost_chunked)
+dispatch.register_alias("pca_cost", "ref", "xla_ref")
+dispatch.register_selector(
+    "pca_cost",
+    # The dominant temp is the elementwise x·x (same (n, d) footprint as x):
+    # stream once it exceeds the shared materialization budget.
+    lambda b, x, basis: "xla_chunked" if dispatch.should_stream(*x.shape) else "xla_ref",
+)
+
+
+def pca_cost(x, basis, *, impl: str = "auto"):
+    """‖P − P·V·Vᵀ‖²_F for an orthonormal (d, r) basis V."""
+    x = jnp.asarray(x, jnp.float32)
+    return dispatch.dispatch("pca_cost", impl, x, basis)
 
 
 def centralized_pca(x, r: int):
@@ -86,6 +120,7 @@ def resilient_pca(
     alive: np.ndarray,
     *,
     recovery_method: str = "auto",
+    impl: str = "auto",
 ) -> ResilientPCAOutput:
     """Paper Algorithm 3, end-to-end."""
     points = np.asarray(points, dtype=np.float32)
@@ -104,7 +139,7 @@ def resilient_pca(
         raise ValueError("no surviving workers — PCA impossible")
     y = np.concatenate(rows, axis=0)  # (|R|·r1, d)
     basis = centralized_pca(jnp.asarray(y), r)
-    cost = float(pca_cost(jnp.asarray(points), basis))
+    cost = float(pca_cost(jnp.asarray(points), basis, impl=impl))
     return ResilientPCAOutput(
         basis=np.asarray(basis), cost=cost, r1=r1, recovery=rec, sketch_rows=y.shape[0]
     )

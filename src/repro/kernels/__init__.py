@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel families + the shared backend-aware dispatch/autotune layer.
+
+Each family (``pairwise_dist``, ``weighted_segsum``, ``flash_attention``)
+ships a Pallas TPU kernel, a compiled XLA path for other backends, and a
+pure-jnp oracle, all registered with :mod:`repro.kernels.dispatch`.  Add a
+new family only for compute hot-spots the paper itself optimizes.
+"""
+
+from . import dispatch  # noqa: F401

@@ -1,0 +1,331 @@
+"""Backend-aware kernel dispatch + autotune — shared by every kernel family.
+
+The three kernel families (``pairwise_dist``, ``weighted_segsum``,
+``flash_attention``) register *named implementations* here instead of each
+carrying its own ``interpret=not _on_tpu()`` logic and ad-hoc size cutoffs.
+
+Resolution rules (``resolve(op, impl, ...)``):
+
+* An explicit canonical name (``"xla_ref"``, ``"xla_chunked"``,
+  ``"pallas_tpu"``, ``"pallas_interpret"``, ...) selects that registered
+  implementation directly.
+* ``"auto"`` asks the op's *selector* (a shape/backend-aware callback) for
+  the best implementation.  Off-TPU this is always a **compiled** XLA path —
+  interpret-mode Pallas is never auto-selected; it survives only behind an
+  explicit ``impl="pallas_interpret"`` or the ``REPRO_PALLAS_INTERPRET=1``
+  debug env var.
+* Legacy per-op aliases (``"pallas"``, ``"ref"``, ``"chunked"``) map onto
+  canonical names so existing call sites keep working.
+
+The module also owns the two cross-op sizing policies that used to live as
+per-op magic numbers (``1 << 14`` / ``1 << 16`` cutoffs, ``_pick_blocks``):
+
+* :func:`pick_blocks` — one VMEM-aware block-size model: choose ``(bn, bk)``
+  so the f32 working set ``(bn·d + bk·d + bn·bk)·itemsize`` fits a VMEM
+  budget, preferring MXU-aligned powers of two.
+* :func:`should_stream` — whether an op should take a chunked/streaming path
+  instead of materializing an ``(n, k)`` intermediate.
+
+On top of the model sits an optional *measured* autotune cache
+(:func:`tuned_block_config`), keyed on ``(op, backend, shape-bucket, dtype)``
+and enabled with ``REPRO_AUTOTUNE=1``: candidate block configs are timed on
+synthetic inputs once per bucket and the winner is cached for the process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "BlockConfig",
+    "autotune_cache_info",
+    "autotune_enabled",
+    "backend",
+    "clear_autotune_cache",
+    "dispatch",
+    "impl_names",
+    "interpret_enabled",
+    "pick_blocks",
+    "register_alias",
+    "register_impl",
+    "register_selector",
+    "resolve",
+    "shape_bucket",
+    "should_stream",
+    "tuned_block_config",
+]
+
+# Debug/feature env vars — read at resolution time.  The public ops resolve
+# eagerly on every call, so toggling mid-process works there; code that bakes
+# a resolution into its own jit trace (e.g. core.kmeans.lloyd) keeps the
+# value seen when its shape was first traced.
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+
+# Default budgets of the shared sizing model.  VMEM_BUDGET bounds the per-tile
+# working set of the Pallas kernels (a conservative quarter of a TPU core's
+# ~16 MB VMEM); MATERIALIZE_BUDGET bounds how large an (n, k) intermediate an
+# op may materialize before auto-dispatch switches to a streaming path.
+VMEM_BUDGET = 4 * 1024 * 1024
+MATERIALIZE_BUDGET = 32 * 1024 * 1024
+
+_MXU_LANE = 128
+_SUBLANE = 8
+
+
+def backend() -> str:
+    """The JAX default backend ("cpu" | "gpu" | "tpu")."""
+    return jax.default_backend()
+
+
+def interpret_enabled() -> bool:
+    """Debug override: force interpret-mode Pallas everywhere."""
+    return os.environ.get(INTERPRET_ENV, "").lower() in ("1", "true", "yes")
+
+
+def autotune_enabled() -> bool:
+    """Whether measured autotuning (vs. the analytic model alone) is on."""
+    return os.environ.get(AUTOTUNE_ENV, "").lower() in ("1", "true", "yes")
+
+
+# --------------------------------------------------------------- registry
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplInfo:
+    op: str
+    name: str
+    fn: Callable
+    backends: Tuple[str, ...]  # backends where auto-selection may pick it
+    debug_only: bool = False  # never auto-selected (e.g. interpret mode)
+
+
+_REGISTRY: Dict[str, Dict[str, ImplInfo]] = {}
+_ALIASES: Dict[str, Dict[str, Callable[[str], str]]] = {}
+_SELECTORS: Dict[str, Callable[..., str]] = {}
+
+
+def register_impl(
+    op: str,
+    name: str,
+    fn: Callable,
+    *,
+    backends: Sequence[str] = ("cpu", "gpu", "tpu"),
+    debug_only: bool = False,
+) -> Callable:
+    """Register implementation ``name`` for ``op``.  Returns ``fn``."""
+    _REGISTRY.setdefault(op, {})[name] = ImplInfo(
+        op=op, name=name, fn=fn, backends=tuple(backends), debug_only=debug_only
+    )
+    return fn
+
+
+def register_alias(op: str, alias: str, to: Callable[[str], str] | str) -> None:
+    """Map a legacy ``impl`` string onto a canonical name (may depend on the
+    backend, e.g. ``"pallas"`` → ``pallas_tpu`` on TPU / ``pallas_interpret``
+    elsewhere)."""
+    fn = (lambda _b, _to=to: _to) if isinstance(to, str) else to
+    _ALIASES.setdefault(op, {})[alias] = fn
+
+
+def register_selector(op: str, fn: Callable[..., str]) -> None:
+    """Install the ``"auto"`` selector for ``op``: ``fn(backend, *args,
+    **kwargs) -> canonical impl name``.  Called at trace time with the op's
+    actual arguments, so it can inspect static shapes."""
+    _SELECTORS[op] = fn
+
+
+def impl_names(op: str) -> Tuple[str, ...]:
+    return tuple(_REGISTRY.get(op, {}))
+
+
+def resolve(op: str, impl: str = "auto", *args: Any, **kwargs: Any) -> ImplInfo:
+    """Resolve ``impl`` to a registered implementation for ``op``.
+
+    ``*args``/``**kwargs`` are the op's call arguments — forwarded to the
+    selector so ``"auto"`` can be shape-aware.
+    """
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    impls = _REGISTRY[op]
+    b = backend()
+    name = impl
+    if name == "auto":
+        if interpret_enabled() and "pallas_interpret" in impls:
+            name = "pallas_interpret"
+        else:
+            sel = _SELECTORS.get(op)
+            if sel is not None:
+                name = sel(b, *args, **kwargs)
+            else:  # first registered impl eligible on this backend
+                name = next(
+                    (
+                        n
+                        for n, info in impls.items()
+                        if b in info.backends and not info.debug_only
+                    ),
+                    "xla_ref",
+                )
+    elif name in _ALIASES.get(op, {}):
+        name = _ALIASES[op][name](b)
+    if name not in impls:
+        raise KeyError(
+            f"op {op!r} has no impl {name!r}; available: {sorted(impls)}"
+        )
+    info = impls[name]
+    # Explicitly named impls still honor the backend gate (a clear error here
+    # beats an opaque Mosaic lowering failure); debug impls run anywhere.
+    if not info.debug_only and b not in info.backends:
+        raise KeyError(
+            f"impl {name!r} of op {op!r} is not available on backend {b!r} "
+            f"(supported: {info.backends})"
+        )
+    return info
+
+
+def dispatch(op: str, impl: str, *args: Any, **kwargs: Any) -> Any:
+    """Resolve and call."""
+    return resolve(op, impl, *args, **kwargs).fn(*args, **kwargs)
+
+
+# ------------------------------------------------------- block-size model
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bn: int
+    bk: int
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 1).bit_length()
+
+
+def pick_blocks(
+    n: int,
+    k: int,
+    d: int,
+    *,
+    itemsize: int = 4,
+    vmem_budget: int = VMEM_BUDGET,
+    bn_cap: int = 256,
+    bk_cap: int = _MXU_LANE,
+) -> BlockConfig:
+    """The one VMEM-aware tile model shared by every blocked op.
+
+    Working set per grid step is the x-tile (bn, d), the c-tile (bk, d) and
+    the (bn, bk) product tile; all f32 in VMEM.  Start from MXU-aligned caps
+    and halve (bn first — it has the bigger footprint) until the set fits.
+    """
+    bn = max(_SUBLANE, min(bn_cap, _pow2_ceil(n)))
+    bk = max(_SUBLANE, min(bk_cap, _pow2_ceil(k)))
+
+    def footprint(bn_: int, bk_: int) -> int:
+        return (bn_ * d + bk_ * d + bn_ * bk_) * itemsize
+
+    while bn > _SUBLANE and footprint(bn, bk) > vmem_budget:
+        bn //= 2
+    while bk > _SUBLANE and footprint(bn, bk) > vmem_budget:
+        bk //= 2
+    return BlockConfig(bn=bn, bk=bk)
+
+
+def should_stream(n: int, k: int, *, itemsize: int = 4, budget: int = MATERIALIZE_BUDGET) -> bool:
+    """True when an (n, k) intermediate is too large to materialize and the
+    op should take its chunked/streaming implementation instead."""
+    return n * k * itemsize > budget
+
+
+# ---------------------------------------------------------- autotune cache
+
+
+def shape_bucket(v: int) -> int:
+    """Next power of two — ragged shapes share one cache entry per octave."""
+    return _pow2_ceil(v)
+
+
+_AUTOTUNE_CACHE: Dict[tuple, BlockConfig] = {}
+_AUTOTUNE_STATS = {"hits": 0, "misses": 0, "measured": 0, "errors": 0}
+
+
+def clear_autotune_cache() -> None:
+    _AUTOTUNE_CACHE.clear()
+    for k in _AUTOTUNE_STATS:
+        _AUTOTUNE_STATS[k] = 0
+
+
+def autotune_cache_info() -> dict:
+    return {"entries": dict(_AUTOTUNE_CACHE), **_AUTOTUNE_STATS}
+
+
+def _time_once(fn: Callable[[], Any], *, reps: int = 3) -> float:
+    """Median wall time of compiled ``fn()`` executions.
+
+    Must run under ``jax.ensure_compile_time_eval()`` (the caller holds the
+    context): autotuning is typically triggered while an op is being traced,
+    and without escaping the trace the bench ops would be *staged* into the
+    caller's jaxpr — perf_counter would measure trace construction, not
+    execution.
+    """
+    run = jax.jit(fn)
+    times = []
+    for _ in range(reps + 1):  # first rep warms up / compiles
+        t0 = time.perf_counter()
+        out = run()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times = sorted(times[1:])
+    return times[len(times) // 2]
+
+
+def tuned_block_config(
+    op: str,
+    shapes: Sequence[int],
+    dtype: Any,
+    *,
+    default: BlockConfig,
+    candidates: Sequence[BlockConfig] = (),
+    bench: Optional[Callable[[BlockConfig], Callable[[], Any]]] = None,
+) -> BlockConfig:
+    """Block config for ``op`` at the given shape bucket.
+
+    Returns the analytic ``default`` unless measured autotuning is enabled
+    (``REPRO_AUTOTUNE=1``) and a ``bench`` factory is provided, in which case
+    each candidate is timed once per ``(op, backend, shape-bucket, dtype)``
+    key and the winner cached for the life of the process.
+
+    ``bench(cfg)`` must return a zero-arg callable running the op with that
+    config on representative (synthetic) inputs.
+    """
+    key = (op, backend(), tuple(shape_bucket(s) for s in shapes), str(dtype))
+    cached = _AUTOTUNE_CACHE.get(key)
+    if cached is not None:
+        _AUTOTUNE_STATS["hits"] += 1
+        return cached
+    if not (autotune_enabled() and bench is not None and len(candidates) > 1):
+        # Analytic model only — deterministic and cheap, so do NOT cache it:
+        # a cached default would mask REPRO_AUTOTUNE=1 enabled later in the
+        # same process for this shape bucket.
+        return default
+    _AUTOTUNE_STATS["misses"] += 1
+    best, best_t = default, float("inf")
+    # The whole measuring block — including the bench FACTORY, which builds
+    # synthetic inputs — escapes any enclosing jit trace, so the candidates
+    # execute compiled instead of being staged as tracers.
+    with jax.ensure_compile_time_eval():
+        for cand in candidates:
+            try:
+                t = _time_once(bench(cand))
+            except Exception:  # a candidate that fails to compile never wins
+                _AUTOTUNE_STATS["errors"] += 1
+                continue
+            _AUTOTUNE_STATS["measured"] += 1
+            if t < best_t:
+                best, best_t = cand, t
+    _AUTOTUNE_CACHE[key] = best
+    return best

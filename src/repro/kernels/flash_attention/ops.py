@@ -1,15 +1,17 @@
-"""Public attention entry point with three interchangeable implementations.
+"""Public attention entry point, routed through :mod:`repro.kernels.dispatch`.
 
-* ``pallas``  — the TPU-target kernel (kernel.py); validated in interpret
-  mode on CPU against ``ref``.
-* ``chunked`` — pure-jnp flash (online softmax, Python loop over query chunks
-  with a `lax.scan` over each chunk's *own* causal KV range).  This is the
-  implementation the multi-pod dry-run lowers: no T×T materialization, FLOPs
-  within ~cq/T of the causal optimum, compact HLO.  Supports GQA and sliding
-  windows (RecurrentGemma local attention).
-* ``ref``     — naive oracle (ref.py).
+* ``pallas_tpu``       — the TPU-target kernel (kernel.py)
+* ``pallas_interpret`` — the same kernel interpreted (debug only; never
+  auto-selected off-TPU)
+* ``xla_chunked``      — compiled jnp flash (online softmax, Python loop over
+  query chunks with a `lax.scan` over each chunk's *own* causal KV range).
+  No T×T materialization, FLOPs within ~cq/T of the causal optimum, compact
+  HLO.  Supports GQA and sliding windows (RecurrentGemma local attention).
+* ``xla_ref``          — naive oracle (ref.py).
 
-``impl="auto"`` picks pallas on TPU, chunked elsewhere.
+``impl="auto"`` picks pallas_tpu on TPU (xla_chunked for windowed attention),
+xla_chunked elsewhere.  Legacy strings ``"pallas"``/``"chunked"``/``"ref"``
+keep working.
 """
 
 from __future__ import annotations
@@ -22,12 +24,9 @@ import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
+from .. import dispatch
 
 __all__ = ["flash_attention", "decode_attention"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _pick_chunks(T: int, S: int, window) -> tuple[int, int]:
@@ -96,14 +95,20 @@ def chunked_attention(q, k, v, *, causal=True, window=None, scale=None):
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 
 
-def _pallas_attention(q, k, v, *, causal, scale):
+def _pallas_attention(q, k, v, *, causal, window, scale, interpret):
+    if window is not None:
+        # Windowed attention falls through to chunked (structural skipping
+        # already yields the T·W cost there).
+        return chunked_attention(q, k, v, causal=causal, window=window, scale=scale)
     B, T, H, dh = q.shape
     S, KV = k.shape[1], k.shape[2]
     g = H // KV
-    bq = min(512, T)
+    # Shared VMEM tile model seeds the caps; shrink to exact divisors.
+    cfg = dispatch.pick_blocks(T, S, dh, bn_cap=512, bk_cap=512)
+    bq = min(cfg.bn, T)
     while T % bq:
         bq //= 2
-    bk = min(512, S)
+    bk = min(cfg.bk, S)
     while S % bk:
         bk //= 2
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
@@ -111,25 +116,83 @@ def _pallas_attention(q, k, v, *, causal, scale):
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
     out = _kernel.flash_attention_kernel_call(
         qf, kf, vf, group=g, causal=causal, scale=scale,
-        bq=bq, bk=bk, interpret=not _on_tpu(),
+        bq=bq, bk=bk, interpret=interpret,
     )
     return out.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
 
 
+def _ref_attention(q, k, v, *, causal, window, scale):
+    assert window is None, "ref oracle does not model sliding windows"
+    return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+dispatch.register_impl("flash_attention", "xla_chunked", chunked_attention)
+dispatch.register_impl("flash_attention", "xla_ref", _ref_attention)
+dispatch.register_impl(
+    "flash_attention", "pallas_tpu",
+    functools.partial(_pallas_attention, interpret=False), backends=("tpu",),
+)
+dispatch.register_impl(
+    "flash_attention", "pallas_interpret",
+    functools.partial(_pallas_attention, interpret=True), debug_only=True,
+)
+dispatch.register_alias("flash_attention", "ref", "xla_ref")
+dispatch.register_alias("flash_attention", "chunked", "xla_chunked")
+dispatch.register_alias(
+    "flash_attention", "pallas",
+    lambda b: "pallas_tpu" if b == "tpu" else "pallas_interpret",
+)
+dispatch.register_selector(
+    "flash_attention",
+    lambda b, q, k, v, causal, window, scale: (
+        "pallas_tpu" if b == "tpu" and window is None else "xla_chunked"
+    ),
+)
+
+
+# scale is static here: it reaches the Pallas kernel as a Python constant (a
+# traced scalar would be a captured tracer inside pallas_call).
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "impl"))
+def _flash_attention_jit(q, k, v, *, causal, window, scale, impl):
+    return dispatch.resolve(
+        "flash_attention", impl, q, k, v, causal=causal, window=window, scale=scale
+    ).fn(q, k, v, causal=causal, window=window, scale=scale)
+
+
+# Variant with a traced scale, for the XLA impls (e.g. a learned temperature
+# flowing through an outer jit) — only the Pallas kernel needs staticness.
 @functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def _flash_attention_jit_dynscale(q, k, v, scale, *, causal, window, impl):
+    return dispatch.resolve(
+        "flash_attention", impl, q, k, v, causal=causal, window=window, scale=scale
+    ).fn(q, k, v, causal=causal, window=window, scale=scale)
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None, impl="auto"):
-    """Dispatching attention.  Shapes: q (B,T,H,dh); k,v (B,S,KV,dh)."""
+    """Dispatching attention.  Shapes: q (B,T,H,dh); k,v (B,S,KV,dh).
+
+    Resolution runs eagerly per call (env toggles honored); the compiled
+    path is keyed on the resolved canonical impl name.
+    """
     dh = q.shape[-1]
     scale = (dh ** -0.5) if scale is None else scale
-    if impl == "ref":
-        assert window is None, "ref oracle does not model sliding windows"
-        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
-    if impl == "pallas" or (impl == "auto" and _on_tpu()):
-        if window is None:
-            return _pallas_attention(q, k, v, causal=causal, scale=scale)
-        # Windowed attention falls through to chunked (structural skipping
-        # already yields the T·W cost there).
-    return chunked_attention(q, k, v, causal=causal, window=window, scale=scale)
+    name = dispatch.resolve(
+        "flash_attention", impl, q, k, v, causal=causal, window=window, scale=scale
+    ).name
+    if isinstance(scale, jax.core.Tracer):
+        if name.startswith("pallas"):
+            raise TypeError(
+                f"flash_attention impl {name!r} needs a concrete scale "
+                "(it is baked into the Pallas kernel); pass a Python float "
+                "or use an xla_* impl"
+            )
+        return _flash_attention_jit_dynscale(
+            q, k, v, scale, causal=causal, window=window, impl=name
+        )
+    # float() also accepts 0-d arrays / numpy scalars.
+    return _flash_attention_jit(
+        q, k, v, causal=causal, window=window, scale=float(scale), impl=name
+    )
 
 
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=None, scale=None):

@@ -26,9 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pairwise_sqdist_kernel_call", "assign_min_kernel_call"]
+__all__ = ["pairwise_sqdist_kernel_call", "assign_min_kernel_call", "PAD_DIST"]
 
-NEG_INIT = 3.4e38  # “+inf” initializer that survives min()
+# Positive, finite "+inf"-like distance: initializes running minima and masks
+# padded center columns.  Kept finite (< f32 max) so no inf − inf can occur.
+PAD_DIST = 3.4e38
 
 
 def _sqdist_block(x, c):
@@ -66,16 +68,21 @@ def pairwise_sqdist_kernel_call(x, c, *, bn: int = 256, bk: int = 128, interpret
     )(x, c)
 
 
-def _assign_kernel(x_ref, c_ref, idx_ref, dist_ref, *, bk):
+def _assign_kernel(x_ref, c_ref, idx_ref, dist_ref, *, bk, k_valid):
     """Fused argmin over k-blocks; running state carried in the output refs."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         idx_ref[...] = jnp.zeros_like(idx_ref)
-        dist_ref[...] = jnp.full_like(dist_ref, NEG_INIT)
+        dist_ref[...] = jnp.full_like(dist_ref, PAD_DIST)
 
     d2 = _sqdist_block(x_ref[...], c_ref[...])  # (bn, bk)
+    # Mask padded center columns by index (centers are zero-padded; masking by
+    # huge pad coordinates would overflow ‖c‖² to inf and poison the block
+    # with inf − inf = NaN).
+    col = j * bk + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2 = jnp.where(col < k_valid, d2, PAD_DIST)
     loc_idx = jnp.argmin(d2, axis=1).astype(jnp.int32)  # (bn,)
     loc_min = jnp.min(d2, axis=1)  # (bn,)
     prev_min = dist_ref[...]
@@ -85,18 +92,22 @@ def _assign_kernel(x_ref, c_ref, idx_ref, dist_ref, *, bk):
     idx_ref[...] = jnp.where(better, loc_idx + j * bk, prev_idx)
 
 
-def assign_min_kernel_call(x, c, *, bn: int = 256, bk: int = 128, interpret: bool = True):
+def assign_min_kernel_call(
+    x, c, *, bn: int = 256, bk: int = 128, k_valid: int | None = None,
+    interpret: bool = True,
+):
     """Fused nearest-center assignment: (idx (n,) i32, sqdist (n,) f32).
 
     Never materializes the (n, k) matrix in HBM — each (bn, bk) tile lives
     only in VMEM with the running (min, argmin) carried across the sequential
-    k grid dimension.
+    k grid dimension.  ``k_valid`` (default: all) marks how many leading
+    center rows are real; zero-padded rows beyond it are masked to PAD_DIST.
     """
     n, d = x.shape
     k, _ = c.shape
     assert n % bn == 0 and k % bk == 0, (n, k, bn, bk)
     grid = (n // bn, k // bk)
-    kern = functools.partial(_assign_kernel, bk=bk)
+    kern = functools.partial(_assign_kernel, bk=bk, k_valid=k if k_valid is None else k_valid)
     return pl.pallas_call(
         kern,
         grid=grid,

@@ -1,8 +1,17 @@
 """Jit'd public wrappers around the pairwise-distance kernels.
 
-Handles padding to block multiples, platform dispatch (Pallas compiled on
-TPU, interpret-mode Pallas or the jnp oracle elsewhere) and unpadding.
-``impl`` ∈ {"auto", "pallas", "ref"}.
+All backend/strategy choice is delegated to :mod:`repro.kernels.dispatch`:
+
+* ``pallas_tpu``      — the compiled Pallas kernel (TPU only)
+* ``pallas_interpret``— the same kernel in interpret mode (debug only; never
+  auto-selected — force with ``impl="pallas_interpret"`` or
+  ``REPRO_PALLAS_INTERPRET=1``)
+* ``xla_ref``         — compiled XLA oracle (materializes the (n, k) matrix)
+* ``xla_chunked``     — streaming assign_min: a ``lax.scan`` over center
+  chunks so the (n, k) matrix is never materialized on any backend
+
+Legacy ``impl`` strings keep working: ``"ref"`` → ``xla_ref``; ``"pallas"``
+→ ``pallas_tpu`` on TPU, ``pallas_interpret`` elsewhere.
 """
 
 from __future__ import annotations
@@ -14,14 +23,11 @@ import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
+from .. import dispatch
 
 __all__ = ["pairwise_sqdist", "assign_min"]
 
-_PAD_DIST = jnp.float32(3.0e38)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+_PAD_DIST = jnp.float32(_kernel.PAD_DIST)
 
 
 def _pad_to(x, m, axis, value=0.0):
@@ -34,49 +40,212 @@ def _pad_to(x, m, axis, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def _pick_blocks(n: int, k: int, d: int) -> tuple[int, int]:
-    """VMEM-aware tile selection: keep (bn·d + bk·d + bn·bk) f32 ≲ 4 MB and
-    MXU-aligned where possible."""
-    bn = 256 if n >= 256 else max(8, 1 << (max(n - 1, 1)).bit_length())
-    bk = 128 if k >= 128 else max(8, 1 << (max(k - 1, 1)).bit_length())
-    # Shrink bn for very wide d so the x tile stays ≤ 2 MB.
-    while bn > 8 and bn * d * 4 > 2 * 1024 * 1024:
-        bn //= 2
-    return bn, bk
+# ------------------------------------------------------------ pallas paths
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def pairwise_sqdist(x, c, *, impl: str = "auto"):
-    """Squared Euclidean distance matrix (n, k) f32."""
-    if impl == "ref" or (impl == "auto" and x.shape[0] * c.shape[0] <= 1 << 14):
-        return _ref.pairwise_sqdist_ref(x, c)
-    n, d = x.shape
-    k = c.shape[0]
-    bn, bk = _pick_blocks(n, k, d)
-    xp = _pad_to(x, bn, 0)
-    cp = _pad_to(c, bk, 0)
+def _tuned_cfg(op, n, k, d, dtype, interpret, run_with_cfg):
+    """Shared-model block config, refined by the measured-autotune cache."""
+    default = dispatch.pick_blocks(n, k, d)
+    if interpret:  # debug path — measuring the interpreter is meaningless
+        return default
+    cands = {default}
+    if default.bn > 8:
+        cands.add(dispatch.BlockConfig(default.bn // 2, default.bk))
+    if default.bk > 8:
+        cands.add(dispatch.BlockConfig(default.bn, default.bk // 2))
+
+    def bench(cfg):
+        xs = jnp.zeros((dispatch.shape_bucket(n), d), dtype)
+        cs = jnp.zeros((dispatch.shape_bucket(k), d), dtype)
+        return lambda: run_with_cfg(xs, cs, cfg)
+
+    return dispatch.tuned_block_config(
+        op, (n, k, d), dtype, default=default, candidates=sorted(
+            cands, key=lambda c: (c.bn, c.bk)
+        ), bench=bench,
+    )
+
+
+def _sqdist_pallas_cfg(x, c, cfg, interpret):
+    n, k = x.shape[0], c.shape[0]
+    xp = _pad_to(x, cfg.bn, 0)
+    cp = _pad_to(c, cfg.bk, 0)
     out = _kernel.pairwise_sqdist_kernel_call(
-        xp, cp, bn=bn, bk=bk, interpret=not _on_tpu()
+        xp, cp, bn=cfg.bn, bk=cfg.bk, interpret=interpret
     )
     return out[:n, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def assign_min(x, c, *, impl: str = "auto"):
-    """Nearest-center assignment: (idx (n,) i32, sqdist (n,) f32).
-
-    Padded centers are pushed to ~+inf distance so they can never win the
-    argmin; padded rows are dropped on return.
-    """
-    if impl == "ref" or (impl == "auto" and x.shape[0] * c.shape[0] <= 1 << 14):
-        return _ref.assign_min_ref(x, c)
+def _sqdist_pallas(x, c, *, interpret: bool):
     n, d = x.shape
     k = c.shape[0]
-    bn, bk = _pick_blocks(n, k, d)
-    xp = _pad_to(x, bn, 0)
-    # Push padded centers far away: pad with a huge coordinate value.
-    cp = _pad_to(c, bk, 0, value=1.0e18)
+    cfg = _tuned_cfg(
+        "pairwise_sqdist", n, k, d, x.dtype, interpret,
+        lambda xs, cs, cf: _sqdist_pallas_cfg(xs, cs, cf, False),
+    )
+    return _sqdist_pallas_cfg(x, c, cfg, interpret)
+
+
+def _assign_pallas_cfg(x, c, cfg, interpret):
+    n, k = x.shape[0], c.shape[0]
+    xp = _pad_to(x, cfg.bn, 0)
+    # Zero-pad centers; the kernel masks columns ≥ k by index (padding with
+    # huge coordinates overflows ‖c‖² to inf → NaN via inf − inf).
+    cp = _pad_to(c, cfg.bk, 0)
     idx, dist = _kernel.assign_min_kernel_call(
-        xp, cp, bn=bn, bk=bk, interpret=not _on_tpu()
+        xp, cp, bn=cfg.bn, bk=cfg.bk, k_valid=k, interpret=interpret
     )
     return idx[:n], dist[:n]
+
+
+def _assign_pallas(x, c, *, interpret: bool):
+    n, d = x.shape
+    k = c.shape[0]
+    cfg = _tuned_cfg(
+        "assign_min", n, k, d, x.dtype, interpret,
+        lambda xs, cs, cf: _assign_pallas_cfg(xs, cs, cf, False),
+    )
+    return _assign_pallas_cfg(x, c, cfg, interpret)
+
+
+# ------------------------------------------------- streaming XLA assign_min
+
+
+def _chunk_bk(n: int) -> int:
+    """Center-chunk width for the streaming path: keep the (n, bk) tile within
+    the materialization budget (the same policy that triggered streaming)."""
+    bk = 1024
+    while bk > 64 and dispatch.should_stream(n, bk):
+        bk //= 2
+    return bk
+
+
+def _assign_min_chunked_bk(x, c, bk: int):
+    n, d = x.shape
+    k = c.shape[0]
+    kp = -(-k // bk) * bk
+    cp = jnp.pad(c.astype(jnp.float32), ((0, kp - k), (0, 0)))
+    xf = x.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=1)  # (n,)
+
+    def body(carry, j):
+        best_d, best_i = carry
+        cb = jax.lax.dynamic_slice_in_dim(cp, j * bk, bk, axis=0)  # (bk, d)
+        c2 = jnp.sum(cb * cb, axis=1)
+        d2 = jnp.maximum(x2[:, None] + c2[None, :] - 2.0 * (xf @ cb.T), 0.0)
+        col = j * bk + jnp.arange(bk)
+        d2 = jnp.where(col[None, :] < k, d2, _PAD_DIST)
+        loc_i = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        loc_d = jnp.min(d2, axis=1)
+        better = loc_d < best_d  # strict < keeps the earlier index on ties
+        return (
+            jnp.where(better, loc_d, best_d),
+            jnp.where(better, j * bk + loc_i, best_i),
+        ), None
+
+    init = (jnp.full((n,), _PAD_DIST, jnp.float32), jnp.zeros((n,), jnp.int32))
+    (dist, idx), _ = jax.lax.scan(body, init, jnp.arange(kp // bk))
+    return idx, dist
+
+
+def _assign_min_chunked(x, c):
+    """ChunkedBroadcast-style nearest-center: scans center chunks carrying the
+    running (min, argmin), so the (n, k) matrix is never materialized."""
+    n, d = x.shape
+    k = c.shape[0]
+    default_bk = _chunk_bk(n)
+    cands = sorted({max(64, default_bk // 2), default_bk, min(1024, default_bk * 2)})
+
+    def bench(cfg):
+        xs = jnp.zeros((dispatch.shape_bucket(n), d), jnp.float32)
+        cs = jnp.zeros((dispatch.shape_bucket(k), d), jnp.float32)
+        return lambda: _assign_min_chunked_bk(xs, cs, cfg.bk)
+
+    cfg = dispatch.tuned_block_config(
+        "assign_min_chunked", (n, k, d), x.dtype,
+        default=dispatch.BlockConfig(0, default_bk),
+        candidates=[dispatch.BlockConfig(0, b) for b in cands],
+        bench=bench,
+    )
+    return _assign_min_chunked_bk(x, c, cfg.bk)
+
+
+# ------------------------------------------------------------ registration
+
+
+dispatch.register_impl("pairwise_sqdist", "xla_ref", _ref.pairwise_sqdist_ref)
+dispatch.register_impl(
+    "pairwise_sqdist", "pallas_tpu",
+    functools.partial(_sqdist_pallas, interpret=False), backends=("tpu",),
+)
+dispatch.register_impl(
+    "pairwise_sqdist", "pallas_interpret",
+    functools.partial(_sqdist_pallas, interpret=True), debug_only=True,
+)
+dispatch.register_alias("pairwise_sqdist", "ref", "xla_ref")
+dispatch.register_alias(
+    "pairwise_sqdist", "pallas",
+    lambda b: "pallas_tpu" if b == "tpu" else "pallas_interpret",
+)
+dispatch.register_selector(
+    "pairwise_sqdist",
+    # The output IS the (n, k) matrix, so off-TPU the compiled oracle is
+    # optimal at every size.
+    lambda b, x, c: "pallas_tpu" if b == "tpu" else "xla_ref",
+)
+
+dispatch.register_impl("assign_min", "xla_ref", _ref.assign_min_ref)
+dispatch.register_impl("assign_min", "xla_chunked", _assign_min_chunked)
+dispatch.register_impl(
+    "assign_min", "pallas_tpu",
+    functools.partial(_assign_pallas, interpret=False), backends=("tpu",),
+)
+dispatch.register_impl(
+    "assign_min", "pallas_interpret",
+    functools.partial(_assign_pallas, interpret=True), debug_only=True,
+)
+dispatch.register_alias("assign_min", "ref", "xla_ref")
+dispatch.register_alias(
+    "assign_min", "pallas",
+    lambda b: "pallas_tpu" if b == "tpu" else "pallas_interpret",
+)
+
+
+def _select_assign(b, x, c):
+    if b == "tpu":
+        return "pallas_tpu"
+    n, k = x.shape[0], c.shape[0]
+    return "xla_chunked" if dispatch.should_stream(n, k) else "xla_ref"
+
+
+dispatch.register_selector("assign_min", _select_assign)
+
+
+# ---------------------------------------------------------- public wrappers
+#
+# Resolution (env vars, shape policy, aliases) runs EAGERLY on every call so
+# REPRO_PALLAS_INTERPRET toggles are honored even after a shape has been
+# compiled; only the resolved canonical name is a jit cache key.  (Inside an
+# outer jit — e.g. lloyd's loop — resolution is captured at that trace.)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _pairwise_sqdist_jit(x, c, *, impl: str):
+    return dispatch.resolve("pairwise_sqdist", impl, x, c).fn(x, c)
+
+
+def pairwise_sqdist(x, c, *, impl: str = "auto"):
+    """Squared Euclidean distance matrix (n, k) f32."""
+    name = dispatch.resolve("pairwise_sqdist", impl, x, c).name
+    return _pairwise_sqdist_jit(x, c, impl=name)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _assign_min_jit(x, c, *, impl: str):
+    return dispatch.resolve("assign_min", impl, x, c).fn(x, c)
+
+
+def assign_min(x, c, *, impl: str = "auto"):
+    """Nearest-center assignment: (idx (n,) i32, sqdist (n,) f32)."""
+    name = dispatch.resolve("assign_min", impl, x, c).name
+    return _assign_min_jit(x, c, impl=name)

@@ -1,0 +1,43 @@
+"""Shims for JAX APIs that moved between the 0.4.x and 0.5+ lines.
+
+The launch/model layers target the modern API (``jax.shard_map``,
+``jax.sharding.AxisType``); this module lets the same code run on the older
+jaxlib pinned in some environments, where ``shard_map`` still lives in
+``jax.experimental`` and meshes have no ``axis_types``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_auto_mesh", "shard_map"]
+
+
+def make_auto_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    On jax ≥ 0.5 Auto is the default ``axis_types`` anyway; on 0.4.x the
+    kwarg (and ``AxisType``) does not exist and every mesh behaves as Auto.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(axis_type.Auto,) * len(axis_names), devices=devices,
+        )
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` (same meaning:
+    verify per-shard replication invariants; False disables the check).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from .compat import make_auto_mesh
+
 __all__ = ["make_production_mesh", "make_test_mesh", "axis_sizes"]
 
 
@@ -28,16 +30,12 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
     else:
         shape = tuple(shape)
         axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU integration tests (requires forced host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def axis_sizes(mesh) -> dict:

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

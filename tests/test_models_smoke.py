@@ -11,6 +11,8 @@ import pytest
 from repro.models import transformer as T
 from repro.models.registry import get_config, list_archs
 
+pytestmark = pytest.mark.slow  # model-zoo compile-heavy; run via `make test-all`
+
 ARCH_MODULES = {
     "qwen3-4b": "qwen3_4b",
     "qwen3-8b": "qwen3_8b",

@@ -41,6 +41,7 @@ def test_greedy_generate_recurrent_family():
     assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.slow  # ~85 s of ring-cache decode compilation on CPU
 def test_windowed_ring_cache_decode_matches_full_history():
     """RecurrentGemma local attention with a ring cache of size=window must
     match decoding with an oversized (full-history) cache once positions

@@ -32,6 +32,8 @@ from repro.train.resilient import make_plan
 from repro.train.trainer import Trainer, TrainerConfig
 from repro.train.train_step import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # model-zoo compile-heavy; run via `make test-all`
+
 
 @pytest.fixture(scope="module")
 def cfg():
