@@ -4,13 +4,17 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all bench-kernels bench
+.PHONY: test test-all docs-check bench-kernels bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all:  ## everything, including compile-heavy slow-marked smoke tests
+test-all: docs-check  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
+
+docs-check:  ## markdown link lint + the quickstart must run end to end
+	$(PY) tools/check_docs.py
+	timeout 120 $(PY) examples/quickstart.py > /dev/null
 
 bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 	$(PY) -m benchmarks.run kernels --emit BENCH_kernels.json

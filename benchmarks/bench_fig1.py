@@ -1,11 +1,20 @@
 """Paper Figure 1: straggler-resilient k-median on the synthetic Gaussian set.
 
-Four schemes on n=5000 2-D points, s=10 workers, t=3 stragglers, k=15:
+Four schemes on n=2500 2-D points, s=10 workers, t=3 stragglers, k=15:
   (a) centralized ground-truth-style solve            → reference cost
   (b) ignore stragglers, non-redundant partition      → quality collapse
   (c) Algorithm 1 with Bernoulli p_a = 0.1            → ~non-redundant load
   (d) Algorithm 1 with Bernoulli p_a = 0.2            → redundancy pays off
 Derived metric: cost ratio vs the centralized reference (lower = better).
+
+``--executor mesh`` runs the per-worker solves node-parallel under
+``shard_map`` on all visible devices (e.g. with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); costs match the
+local executor to f32 round-off (pinned at 1e-5 in
+tests/test_distributed_executor.py).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m benchmarks.bench_fig1 --executor mesh
 """
 
 from __future__ import annotations
@@ -17,6 +26,7 @@ import numpy as np
 from repro.core import (
     bernoulli_assignment,
     fixed_count_stragglers,
+    get_executor,
     ignore_stragglers_kmedian,
     lloyd,
     resilient_kmedian,
@@ -26,11 +36,26 @@ from repro.data.synthetic import franti_s1_like
 
 from .common import emit, timed
 
+# Paper provenance: Figure 1 of arXiv:2002.08892 uses the Fränti–Virmajoki
+# S1-style set with n=5000, s=10 workers, t=3 stragglers, k=15 medians and
+# Bernoulli p_a ∈ {0.1, 0.2}.  The benchmark default halves n to 2500 so the
+# sweep stays fast on a 2-core CPU CI box; examples/quickstart.py runs the
+# paper-scale n=5000.  s/t/k/p_a are the paper's values.
 
-def run(n: int = 2500, s: int = 10, t: int = 3, k: int = 15, seed: int = 0) -> None:
+
+def run(
+    n: int = 2500,
+    s: int = 10,
+    t: int = 3,
+    k: int = 15,
+    seed: int = 0,
+    executor: str = "local",
+) -> None:
+    ex = get_executor(executor)
     pts, _, _ = franti_s1_like(n)
     rng = np.random.default_rng(seed)
     alive = fixed_count_stragglers(s, t, rng)
+    emit(f"fig1_executor_{executor}", 0.0, f"devices={jax.device_count()}")
 
     us, central = timed(
         lambda: lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), k, iters=30, median=True),
@@ -41,7 +66,8 @@ def run(n: int = 2500, s: int = 10, t: int = 3, k: int = 15, seed: int = 0) -> N
 
     us, ign = timed(
         lambda: ignore_stragglers_kmedian(
-            pts, k, singleton_assignment(n, s), alive, local_iters=10, coord_iters=25
+            pts, k, singleton_assignment(n, s), alive,
+            local_iters=10, coord_iters=25, executor=ex,
         ),
         iters=1,
     )
@@ -50,7 +76,9 @@ def run(n: int = 2500, s: int = 10, t: int = 3, k: int = 15, seed: int = 0) -> N
     for p_a in (0.1, 0.2):
         a = bernoulli_assignment(n, s, ell=p_a * s, rng=np.random.default_rng(seed + 1))
         us, out = timed(
-            lambda a=a: resilient_kmedian(pts, k, a, alive, local_iters=10, coord_iters=25),
+            lambda a=a: resilient_kmedian(
+                pts, k, a, alive, local_iters=10, coord_iters=25, executor=ex
+            ),
             iters=1,
         )
         emit(
@@ -60,6 +88,47 @@ def run(n: int = 2500, s: int = 10, t: int = 3, k: int = 15, seed: int = 0) -> N
             f"covered={out.recovery.covered_fraction:.3f}",
         )
 
+    from repro.kernels import dispatch
+
+    if dispatch.autotune_enabled():
+        # Exercise the measured-autotune path on this workload's shapes (off
+        # TPU the auto-selector picks the untuned dense oracle at Fig-1
+        # sizes, so force the tuned streaming impl) and report what the
+        # cache did: the first REPRO_AUTOTUNE=1 run measures and persists,
+        # a second run must show measured=0 with the winners loaded from
+        # disk (see repro.kernels.dispatch, REPRO_AUTOTUNE_CACHE).
+        from repro.kernels.pairwise_dist import ops as pd
+
+        centers = np.asarray(central.centers)
+        us, _ = timed(
+            lambda: pd.assign_min(jnp.asarray(pts), jnp.asarray(centers),
+                                  impl="xla_chunked"),
+            iters=1,
+        )
+        info = dispatch.autotune_cache_info()
+        emit(
+            "fig1_autotune", us,
+            f"measured={info['measured']} disk_loaded={info['disk_loaded']} "
+            f"cache={dispatch.autotune_cache_file()}",
+        )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--executor", choices=("local", "mesh"), default="local",
+                    help="where the per-worker solves run (mesh = shard_map "
+                         "over all visible devices)")
+    ap.add_argument("--n", type=int, default=2500)
+    ap.add_argument("--s", type=int, default=10)
+    ap.add_argument("--t", type=int, default=3)
+    ap.add_argument("--k", type=int, default=15)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n=args.n, s=args.s, t=args.t, k=args.k, seed=args.seed, executor=args.executor)
+
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -33,13 +33,25 @@ from .aggregation import (  # noqa: F401
     resilient_sum,
     weighted_union,
 )
-from .kmeans import ClusteringResult, clustering_cost, lloyd, plusplus_init  # noqa: F401
+from .executor import Executor, LocalExecutor, get_executor  # noqa: F401
+from .kmeans import (  # noqa: F401
+    ClusteringResult,
+    clustering_cost,
+    lloyd,
+    plusplus_init,
+    resilient_cost,
+)
 from .kmedian import (  # noqa: F401
     ResilientClusteringOutput,
     ignore_stragglers_kmedian,
     resilient_kmedian,
 )
-from .coreset import Coreset, sensitivity_coreset, uniform_coreset  # noqa: F401
+from .coreset import (  # noqa: F401
+    Coreset,
+    resilient_coreset,
+    sensitivity_coreset,
+    uniform_coreset,
+)
 from .subspace import (  # noqa: F401
     ResilientSubspaceOutput,
     lloyd_subspace,

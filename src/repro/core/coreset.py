@@ -13,16 +13,17 @@ Sampling ``m`` points with probabilities ``p_i ∝ σ_i`` and reweighting by
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from . import kmeans
+from .executor import Executor
 from ..kernels.pairwise_dist import ops as pd
 from ..kernels.weighted_segsum import ops as ss
 
-__all__ = ["Coreset", "sensitivity_coreset", "uniform_coreset"]
+__all__ = ["Coreset", "sensitivity_coreset", "uniform_coreset", "resilient_coreset"]
 
 _EPS = 1e-12
 
@@ -66,6 +67,62 @@ def sensitivity_coreset(
     picks = jax.random.categorical(key_s, jnp.log(jnp.maximum(p, _EPS)), shape=(m,))
     cw = w[picks] / (m * jnp.maximum(p[picks], _EPS))
     return Coreset(points=x[picks], weights=cw)
+
+
+@functools.lru_cache(maxsize=None)
+def _local_coreset_fn(k: int, m: int, squared: bool, bicriteria_iters: int, impl: str):
+    """Per-node sensitivity coreset with the Lemma-3 ``b`` weighting applied
+    on device.  Memoized so the executor seam can reuse its jit cache."""
+
+    def one(key, x, w, b):
+        cs = sensitivity_coreset(
+            key, x, k, m, weights=w, squared=squared,
+            bicriteria_iters=bicriteria_iters, impl=impl,
+        )
+        return cs.points, b.astype(cs.weights.dtype) * cs.weights
+
+    return one
+
+
+def resilient_coreset(
+    points,
+    k: int,
+    m_per_node: int,
+    assignment,
+    alive,
+    *,
+    recovery_method: str = "auto",
+    squared: bool = True,
+    bicriteria_iters: int = 5,
+    seed: int = 0,
+    impl: str = "auto",
+    executor: Union[None, str, Executor] = None,
+) -> Coreset:
+    """Straggler-resilient distributed coreset (the communication primitive of
+    Algorithm 2): every node samples an ``m_per_node``-point sensitivity
+    coreset of its shard; the coordinator keeps the b-reweighted union, which
+    is a ``2(ε+δ)``-coreset of the full set by Lemma 3'.
+
+    The union keeps the fixed ``(s·m_per_node,)`` stacked shape — straggler
+    rows carry weight 0 and are inert in any weighted solve downstream.
+    ``executor`` selects local vs mesh execution (repro.core.executor).
+    """
+    from .kmedian import prepare_resilient_run
+
+    points, alive, rec, ex, xs, ws = prepare_resilient_run(
+        points, assignment, alive, recovery_method=recovery_method, executor=executor
+    )
+    s, _, d = xs.shape
+    keys = jax.random.split(jax.random.PRNGKey(seed), s)
+    fn = _local_coreset_fn(k, m_per_node, squared, bicriteria_iters, impl)
+    pts, wts = ex.map_nodes(
+        fn,
+        (keys, jnp.asarray(xs), jnp.asarray(ws), jnp.asarray(rec.b_full, jnp.float32)),
+    )
+    return Coreset(
+        points=jnp.reshape(pts, (s * m_per_node, d)),
+        weights=jnp.reshape(wts, (s * m_per_node,)),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("m",))

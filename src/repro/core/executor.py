@@ -1,0 +1,122 @@
+"""Executor seam: WHERE per-node local computations run.
+
+The paper's Algorithms 1–3 share one shape: pack shards per the
+:class:`~repro.core.assignment.Assignment`, run an independent local
+computation on every node's shard, then combine the alive nodes' outputs with
+the recovery weights ``b`` (Lemma 3).  The *algorithms* (kmedian, pca,
+coreset, kmeans) define the per-node function; the *executor* decides where
+it runs:
+
+* :class:`LocalExecutor` — single process, all nodes as one ``jax.vmap``
+  batch (the seed repo's behaviour; default).
+* :class:`~repro.launch.distributed.MeshExecutor` — every node is placed on
+  a device of a 1-D ``("nodes",)`` mesh and the same per-node function runs
+  under ``shard_map``; the alive/recovery mask is a *runtime input* of the
+  compiled step (no recompile when the straggler set changes) and the
+  Lemma-3 combine (``core.aggregation``) executes on device as a ``psum``.
+
+Both executors compile the *identical* inner function (the mesh path merely
+splits the vmap batch across devices), so their outputs agree to float32
+round-off — `tests/test_distributed_executor.py` pins cost parity at 1e-5.
+
+Per-node functions must be *stable objects* (module-level or
+``functools.lru_cache``-memoized closures): the executor keys its jit cache
+on the function identity, so a fresh closure per call would recompile every
+time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from .aggregation import resilient_sum
+
+__all__ = ["Executor", "LocalExecutor", "get_executor"]
+
+
+class Executor:
+    """Protocol: map an independent per-node function over node-stacked data.
+
+    ``node_args`` are arrays with a leading node axis (one slice per node,
+    e.g. the padded shards from ``pack_local_shards``); ``broadcast_args``
+    are shared by every node (e.g. a candidate center set).
+    """
+
+    name = "abstract"
+
+    def map_nodes(self, fn: Callable, node_args: Sequence[Any], broadcast_args: Sequence[Any] = ()):
+        """``stack_i fn(node_args[..][i], *broadcast_args)`` — one output row
+        per node."""
+        raise NotImplementedError
+
+    def resilient_reduce(
+        self,
+        fn: Callable,
+        node_args: Sequence[Any],
+        broadcast_args: Sequence[Any],
+        b_full,
+    ):
+        """Lemma-3 combine: ``Σ_i b_i · fn(node_i)`` over every output leaf.
+
+        ``b_full`` carries zeros at stragglers, so their contributions vanish
+        wherever the reduction runs.
+        """
+        raise NotImplementedError
+
+
+class LocalExecutor(Executor):
+    """All nodes simulated in one process as a single vmapped batch."""
+
+    name = "local"
+
+    def __init__(self):
+        self._jitted: dict = {}
+
+    def _compiled(self, fn: Callable, n_node: int, n_bcast: int):
+        key = (fn, n_node, n_bcast)
+        if key not in self._jitted:
+            in_axes = (0,) * n_node + (None,) * n_bcast
+            self._jitted[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
+        return self._jitted[key]
+
+    def map_nodes(self, fn, node_args, broadcast_args=()):
+        node_args = tuple(jnp.asarray(a) for a in node_args)
+        broadcast_args = tuple(jnp.asarray(a) for a in broadcast_args)
+        return self._compiled(fn, len(node_args), len(broadcast_args))(
+            *node_args, *broadcast_args
+        )
+
+    def resilient_reduce(self, fn, node_args, broadcast_args, b_full):
+        per_node = self.map_nodes(fn, node_args, broadcast_args)
+        return resilient_sum(per_node, jnp.asarray(b_full, jnp.float32))
+
+
+_LOCAL_SINGLETON: Optional[LocalExecutor] = None
+_MESH_SINGLETON = None
+
+
+def get_executor(spec: Union[None, str, Executor] = None) -> Executor:
+    """Resolve an ``executor=`` argument.
+
+    ``None`` / ``"local"`` → the shared :class:`LocalExecutor`;
+    ``"mesh"`` → the shared :class:`~repro.launch.distributed.MeshExecutor`
+    over all visible devices; an :class:`Executor` instance passes through.
+    Singletons are shared so jit caches persist across calls.
+    """
+    global _LOCAL_SINGLETON, _MESH_SINGLETON
+    if spec is None or spec == "local":
+        if _LOCAL_SINGLETON is None:
+            _LOCAL_SINGLETON = LocalExecutor()
+        return _LOCAL_SINGLETON
+    if spec == "mesh":
+        if _MESH_SINGLETON is None:
+            from ..launch.distributed import MeshExecutor  # lazy: core must not pull launch eagerly
+
+            _MESH_SINGLETON = MeshExecutor()
+        return _MESH_SINGLETON
+    if isinstance(spec, Executor):
+        return spec
+    raise ValueError(f"unknown executor {spec!r}; expected None, 'local', 'mesh', or an Executor")

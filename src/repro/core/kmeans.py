@@ -21,7 +21,13 @@ import jax.numpy as jnp
 from ..kernels.pairwise_dist import ops as pd
 from ..kernels.weighted_segsum import ops as ss
 
-__all__ = ["ClusteringResult", "plusplus_init", "lloyd", "clustering_cost"]
+__all__ = [
+    "ClusteringResult",
+    "plusplus_init",
+    "lloyd",
+    "clustering_cost",
+    "resilient_cost",
+]
 
 _EPS = 1e-12
 
@@ -43,8 +49,16 @@ def plusplus_init(key, x, k: int, *, weights=None, median: bool = False, impl: s
     """Weighted k-means++ (d²-sampling) / k-median++ (d-sampling) seeding."""
     n, d = x.shape
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    # Zero-weight rows (shard padding, straggler slots in fixed-shape unions)
+    # must have sampling probability EXACTLY zero, not the _EPS floor — the
+    # floor applies only to real points whose score underflows.  (All-zero w
+    # degenerates to argmax over -inf logits = row 0; callers discard those
+    # solves by weighting their outputs with the same zeros.)
+    def logits_of(score):
+        return jnp.where(w > 0, jnp.log(jnp.maximum(w * score, _EPS)), -jnp.inf)
+
     key0, key = jax.random.split(key)
-    first = jax.random.categorical(key0, jnp.log(jnp.maximum(w, _EPS)))
+    first = jax.random.categorical(key0, logits_of(jnp.ones_like(w)))
     # All k rows start at the first chosen point, so unchosen slots coincide
     # with a real center and can never distort the d-sampling distances
     # (duplicate centers are harmless under a min).
@@ -55,8 +69,7 @@ def plusplus_init(key, x, k: int, *, weights=None, median: bool = False, impl: s
         key, sub = jax.random.split(key)
         d2 = _min_dist_sq(x, centers, impl)
         score = d2 if not median else jnp.sqrt(jnp.maximum(d2, 0.0))
-        logits = jnp.log(jnp.maximum(w * score, _EPS))
-        nxt = jax.random.categorical(sub, logits)
+        nxt = jax.random.categorical(sub, logits_of(score))
         return centers.at[i].set(x[nxt]), key
 
     centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
@@ -130,3 +143,47 @@ def clustering_cost(x, centers, *, weights=None, median: bool = False, impl: str
     _, d2 = pd.assign_min(x, centers, impl=impl)
     dist = jnp.sqrt(jnp.maximum(d2, 0.0)) if median else d2
     return jnp.sum(w.astype(jnp.float32) * dist)
+
+
+@functools.lru_cache(maxsize=None)
+def _local_cost_fn(median: bool, impl: str):
+    """Per-node shard cost against a broadcast center set (Lemma-3 ``f``)."""
+
+    def one(x, w, centers):
+        return clustering_cost(x, centers, weights=w, median=median, impl=impl)
+
+    return one
+
+
+def resilient_cost(
+    points,
+    centers,
+    assignment,
+    alive,
+    *,
+    median: bool = False,
+    recovery_method: str = "auto",
+    impl: str = "auto",
+    executor=None,
+) -> float:
+    """Straggler-resilient estimate of cost(P, C) by Lemma 3.
+
+    The clustering cost is additively decomposable, so each node evaluates
+    its local shard cost and the recovery-weighted sum over the alive set
+    satisfies ``cost ≤ Σ b_i·cost_i ≤ (1+δ)·cost``.  With the mesh executor
+    the per-shard costs AND the weighted combine (a ``psum`` over the node
+    axis, see :func:`repro.core.aggregation.resilient_psum`) run entirely on
+    device — only the final replicated scalar reaches the host.
+    """
+    from .kmedian import prepare_resilient_run
+
+    points, alive, rec, ex, xs, ws = prepare_resilient_run(
+        points, assignment, alive, recovery_method=recovery_method, executor=executor
+    )
+    est = ex.resilient_reduce(
+        _local_cost_fn(median, impl),
+        (jnp.asarray(xs), jnp.asarray(ws)),
+        (jnp.asarray(centers, jnp.float32),),
+        rec.b_full,
+    )
+    return float(est)

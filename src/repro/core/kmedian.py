@@ -9,29 +9,36 @@ Pipeline (exactly the paper's):
    reweights by the recovery vector (``w(c) = b_i·w_i(c)``), and solves
    weighted k-median on the union.  Theorem 3: cost ≤ 3(1+δ)·OPT.
 
-TPU adaptation: workers are *simulated as a vmapped batch* over padded local
-shards (one compiled program regardless of node count / load skew — the real
-deployment maps the same code over mesh rows, see repro.launch).  The
-coordinator step is host-side numpy orchestration around the same jitted
-Lloyd solver.
+Execution: WHERE step 2 runs is the executor seam
+(:mod:`repro.core.executor`) — the default :class:`LocalExecutor` simulates
+all workers as one vmapped batch over padded local shards (one compiled
+program regardless of node count / load skew);
+:class:`repro.launch.distributed.MeshExecutor` runs the identical per-node
+program node-parallel under ``shard_map`` on a device mesh, with the
+recovery weights applied as a runtime mask inside the compiled step.  The
+combine keeps the fixed ``(s·k,)`` stacked shape in both cases — straggler
+rows carry recovery weight 0 and are inert in the coordinator solve, so the
+straggler pattern never changes a compiled shape.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import kmeans
-from .aggregation import weighted_union
 from .assignment import Assignment
+from .executor import Executor, get_executor
 from .recovery import RecoveryResult, solve_recovery
 
 __all__ = [
     "pack_local_shards",
+    "prepare_resilient_run",
     "local_cluster_batch",
     "resilient_kmedian",
     "ignore_stragglers_kmedian",
@@ -44,8 +51,8 @@ class ResilientClusteringOutput:
     centers: np.ndarray          # (k, d) final coordinator centers
     cost: float                  # cost(P, centers) on the FULL dataset
     recovery: RecoveryResult     # the b used (diagnostics: δ, coverage)
-    summary_points: np.ndarray   # the coordinator's weighted input Y
-    summary_weights: np.ndarray
+    summary_points: np.ndarray   # the coordinator's weighted input Y (s·k, d)
+    summary_weights: np.ndarray  # b-weighted center weights (s·k,); 0 at stragglers
 
 
 def pack_local_shards(
@@ -54,6 +61,9 @@ def pack_local_shards(
     """Pad per-node shards to the max load: (s, m, d) data + (s, m) weights.
 
     Padding rows are zeros with weight 0 — inert in every weighted statistic.
+    Row ``i`` is exactly the data the assignment matrix maps to node ``i``,
+    so sharding the stacked array over a device mesh's node axis IS the
+    paper's data placement.
     """
     s = assignment.num_nodes
     loads = [assignment.shards_of(i) for i in range(s)]
@@ -67,26 +77,104 @@ def pack_local_shards(
     return xs, ws
 
 
-def local_cluster_batch(
-    key, xs, ws, k: int, *, iters: int = 20, median: bool = True, impl: str = "auto"
+def prepare_resilient_run(
+    points,
+    assignment: Assignment,
+    alive,
+    *,
+    recovery_method: str = "auto",
+    executor: Union[None, str, Executor] = None,
 ):
-    """All workers' local clustering as one vmapped program.
+    """Shared prelude of every distributed algorithm: dtype coercion,
+    recovery solve, all-dead guard, executor resolution, shard packing.
+
+    Returns ``(points, alive, rec, ex, xs, ws)``.  Keeping this in one place
+    keeps the guard/dtype handling from drifting between Algorithms 1–3.
+    """
+    points = np.asarray(points, dtype=np.float32)
+    alive = np.asarray(alive, dtype=bool)
+    rec = solve_recovery(assignment, alive, method=recovery_method)
+    if not np.any(rec.b_full > 0):
+        raise ValueError("no surviving nodes with data — cannot form union")
+    ex = get_executor(executor)
+    xs, ws = pack_local_shards(points, assignment)
+    return points, alive, rec, ex, xs, ws
+
+
+@functools.lru_cache(maxsize=None)
+def _local_solve_fn(k: int, iters: int, median: bool, impl: str):
+    """Per-node local solve, memoized so executors can key jit caches on it.
+
+    ``b`` is the node's recovery weight — applied to the center weights
+    INSIDE the compiled step, so straggling is a runtime input, not a shape.
+    """
+
+    def one(key, x, w, b):
+        from ..kernels.weighted_segsum import ops as ss
+
+        res = kmeans.lloyd(key, x, k, weights=w, iters=iters, median=median, impl=impl)
+        _, tot = ss.weighted_segsum(x, w, res.assignment, k, impl=impl)
+        return res.centers, b.astype(tot.dtype) * tot
+
+    return one
+
+
+def local_cluster_batch(
+    key, xs, ws, k: int, *, iters: int = 20, median: bool = True, impl: str = "auto",
+    executor: Union[None, str, Executor] = None,
+):
+    """All workers' local clustering through the executor seam.
 
     Returns (centers (s, k, d), center_weights (s, k)) where center weights
     are the weighted local cluster sizes (the paper's ``w_i(c)``).
-    ``impl`` selects the kernel implementation (repro.kernels.dispatch).
+    ``impl`` selects the kernel implementation (repro.kernels.dispatch);
+    ``executor`` selects where the per-node solves run (repro.core.executor).
     """
+    ex = get_executor(executor)
     s = xs.shape[0]
     keys = jax.random.split(key, s)
+    ones = jnp.ones((s,), jnp.float32)  # no recovery weighting at this layer
+    fn = _local_solve_fn(k, iters, median, impl)
+    return ex.map_nodes(fn, (keys, jnp.asarray(xs), jnp.asarray(ws), ones))
 
-    def one(key, x, w):
-        res = kmeans.lloyd(key, x, k, weights=w, iters=iters, median=median, impl=impl)
-        from ..kernels.weighted_segsum import ops as ss
 
-        _, tot = ss.weighted_segsum(x, w, res.assignment, k, impl=impl)
-        return res.centers, tot
-
-    return jax.vmap(one)(keys, jnp.asarray(xs), jnp.asarray(ws))
+def _coordinator_pipeline(
+    points: np.ndarray,
+    k: int,
+    xs: np.ndarray,
+    ws: np.ndarray,
+    b_full: np.ndarray,
+    ex: Executor,
+    *,
+    local_iters: int,
+    coord_iters: int,
+    seed: int,
+    impl: str,
+) -> tuple[np.ndarray, float, np.ndarray, np.ndarray]:
+    """Shared steps 2–3: local solves (via executor), b-weighted fixed-shape
+    union, coordinator weighted k-median, full-dataset cost."""
+    s, _, d = xs.shape
+    keys = jax.random.split(jax.random.PRNGKey(seed), s)
+    fn = _local_solve_fn(k, local_iters, True, impl)
+    centers_s, wts_s = ex.map_nodes(
+        fn,
+        (keys, jnp.asarray(xs), jnp.asarray(ws), jnp.asarray(b_full, jnp.float32)),
+    )
+    # Fixed-shape union: (s·k, d) points, b-weighted weights (0 at stragglers
+    # — inert in the weighted coordinator solve, like in-shard padding rows).
+    y = np.asarray(centers_s).reshape(s * k, d)
+    wy = np.asarray(wts_s).reshape(s * k)
+    res = kmeans.lloyd(
+        jax.random.PRNGKey(seed + 1), jnp.asarray(y), k, weights=jnp.asarray(wy),
+        iters=coord_iters, median=True, impl=impl,
+    )
+    centers = np.asarray(res.centers)
+    full_cost = float(
+        kmeans.clustering_cost(
+            jnp.asarray(points), jnp.asarray(centers), median=True, impl=impl
+        )
+    )
+    return centers, full_cost, y, wy
 
 
 def resilient_kmedian(
@@ -100,35 +188,16 @@ def resilient_kmedian(
     coord_iters: int = 40,
     seed: int = 0,
     impl: str = "auto",
+    executor: Union[None, str, Executor] = None,
 ) -> ResilientClusteringOutput:
-    """Paper Algorithm 1, end-to-end."""
-    points = np.asarray(points, dtype=np.float32)
-    alive = np.asarray(alive, dtype=bool)
-    rec = solve_recovery(assignment, alive, method=recovery_method)
-
-    xs, ws = pack_local_shards(points, assignment)
-    key = jax.random.PRNGKey(seed)
-    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters, impl=impl)
-    centers_s = np.asarray(centers_s)
-    wts_s = np.asarray(wts_s)
-
-    # Coordinator: b-weighted union of alive workers' centers (Lemma 3).
-    y, wy = weighted_union(
-        [centers_s[i] for i in range(assignment.num_nodes)],
-        [wts_s[i] for i in range(assignment.num_nodes)],
-        rec.b_full,
-        alive=alive,
+    """Paper Algorithm 1, end-to-end.  ``executor`` selects local vs mesh
+    execution of the per-worker solves (see repro.core.executor)."""
+    points, alive, rec, ex, xs, ws = prepare_resilient_run(
+        points, assignment, alive, recovery_method=recovery_method, executor=executor
     )
-    coord_key = jax.random.PRNGKey(seed + 1)
-    res = kmeans.lloyd(
-        coord_key, jnp.asarray(y), k, weights=jnp.asarray(wy),
-        iters=coord_iters, median=True, impl=impl,
-    )
-    centers = np.asarray(res.centers)
-    full_cost = float(
-        kmeans.clustering_cost(
-            jnp.asarray(points), jnp.asarray(centers), median=True, impl=impl
-        )
+    centers, full_cost, y, wy = _coordinator_pipeline(
+        points, k, xs, ws, rec.b_full, ex,
+        local_iters=local_iters, coord_iters=coord_iters, seed=seed, impl=impl,
     )
     return ResilientClusteringOutput(
         centers=centers, cost=full_cost, recovery=rec,
@@ -146,33 +215,20 @@ def ignore_stragglers_kmedian(
     coord_iters: int = 40,
     seed: int = 0,
     impl: str = "auto",
+    executor: Union[None, str, Executor] = None,
 ) -> ResilientClusteringOutput:
     """The paper's Fig 1(b) baseline: no recovery weighting — alive workers'
-    centers are combined as-is (b ≡ 1).  With a non-redundant assignment this
-    silently drops the stragglers' data."""
+    centers are combined as-is (b ≡ 1 on the alive set).  With a
+    non-redundant assignment this silently drops the stragglers' data."""
     points = np.asarray(points, dtype=np.float32)
     alive = np.asarray(alive, dtype=bool)
+    if not alive.any():
+        raise ValueError("no surviving nodes with data — cannot form union")
+    ex = get_executor(executor)
     xs, ws = pack_local_shards(points, assignment)
-    key = jax.random.PRNGKey(seed)
-    centers_s, wts_s = local_cluster_batch(key, xs, ws, k, iters=local_iters, impl=impl)
-    centers_s = np.asarray(centers_s)
-    wts_s = np.asarray(wts_s)
-    ones = np.ones(assignment.num_nodes)
-    y, wy = weighted_union(
-        [centers_s[i] for i in range(assignment.num_nodes)],
-        [wts_s[i] for i in range(assignment.num_nodes)],
-        ones,
-        alive=alive,
-    )
-    res = kmeans.lloyd(
-        jax.random.PRNGKey(seed + 1), jnp.asarray(y), k,
-        weights=jnp.asarray(wy), iters=coord_iters, median=True, impl=impl,
-    )
-    centers = np.asarray(res.centers)
-    full_cost = float(
-        kmeans.clustering_cost(
-            jnp.asarray(points), jnp.asarray(centers), median=True, impl=impl
-        )
+    centers, full_cost, y, wy = _coordinator_pipeline(
+        points, k, xs, ws, alive.astype(np.float32), ex,
+        local_iters=local_iters, coord_iters=coord_iters, seed=seed, impl=impl,
     )
     from .recovery import lp_recovery
 

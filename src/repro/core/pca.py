@@ -12,16 +12,17 @@ singular subspace.  Theorem 5: cost(P, L̂) ≤ (1+4δ)·cost(P, L*).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .assignment import Assignment
-from .kmedian import pack_local_shards
-from .recovery import RecoveryResult, solve_recovery
+from .executor import Executor, get_executor
+from .recovery import RecoveryResult
 from ..kernels import dispatch
 
 __all__ = [
@@ -39,22 +40,41 @@ def relaxed_coreset_rank(r: int, delta: float) -> int:
     return r + max(1, math.ceil(r / delta)) - 1
 
 
-def local_relaxed_coresets(xs, r1: int):
-    """Vmapped local sketches: (s, m, d) → (s, r1, d) = Σ^{(r₁)} Vᵀ rows.
+@functools.lru_cache(maxsize=None)
+def _sketch_fn(r1: int):
+    """Per-node relaxed-coreset sketch ``√b · Σ^{(r₁)} Vᵀ`` (Lemma 5's
+    b-weighting enters as √b since the PCA cost is squared).  Memoized so the
+    executor seam can reuse its jit cache (see repro.core.executor)."""
 
-    Padding rows are zeros → they only add zero singular values; harmless.
-    """
-
-    def one(x):
+    def one(x, b):
         # economy SVD; we need top-r1 right singular vectors and values.
         _, sv, vt = jnp.linalg.svd(x, full_matrices=False)
         r1c = min(r1, vt.shape[0])
         sketch = sv[:r1c, None] * vt[:r1c]
         if r1c < r1:  # static branch: pad to the declared sketch size
             sketch = jnp.pad(sketch, ((0, r1 - r1c), (0, 0)))
-        return sketch
+        return jnp.sqrt(jnp.maximum(b, 0.0)).astype(sketch.dtype) * sketch
 
-    return jax.vmap(one)(xs)
+    return one
+
+
+def local_relaxed_coresets(
+    xs, r1: int, *, b_full=None, executor: Union[None, str, Executor] = None
+):
+    """Local sketches through the executor seam: (s, m, d) → (s, r1, d).
+
+    Padding rows are zeros → they only add zero singular values; harmless.
+    ``b_full`` (defaults to all-ones) applies the Lemma-5 √b weighting on
+    device, inside the compiled per-node step.
+    """
+    ex = get_executor(executor)
+    xs = jnp.asarray(xs)
+    b = (
+        jnp.ones((xs.shape[0],), jnp.float32)
+        if b_full is None
+        else jnp.asarray(b_full, jnp.float32)
+    )
+    return ex.map_nodes(_sketch_fn(r1), (xs, b))
 
 
 def _pca_cost_dense(x, basis):
@@ -121,25 +141,26 @@ def resilient_pca(
     *,
     recovery_method: str = "auto",
     impl: str = "auto",
+    executor: Union[None, str, Executor] = None,
 ) -> ResilientPCAOutput:
-    """Paper Algorithm 3, end-to-end."""
-    points = np.asarray(points, dtype=np.float32)
-    alive = np.asarray(alive, dtype=bool)
-    rec = solve_recovery(assignment, alive, method=recovery_method)
+    """Paper Algorithm 3, end-to-end.  ``executor`` selects local vs mesh
+    execution of the per-worker sketches (see repro.core.executor)."""
+    from .kmedian import prepare_resilient_run
+
+    points, alive, rec, ex, xs, _ = prepare_resilient_run(
+        points, assignment, alive, recovery_method=recovery_method, executor=executor
+    )
     r1 = relaxed_coreset_rank(r, delta)
-
-    xs, _ = pack_local_shards(points, assignment)
-    sketches = np.asarray(local_relaxed_coresets(jnp.asarray(xs), r1))  # (s, r1, d)
-
-    rows = []
-    for i in np.flatnonzero(alive):
-        if rec.b_full[i] > 0:
-            rows.append(math.sqrt(rec.b_full[i]) * sketches[i])
-    if not rows:
-        raise ValueError("no surviving workers — PCA impossible")
-    y = np.concatenate(rows, axis=0)  # (|R|·r1, d)
+    contributing = int(np.sum(alive & (rec.b_full > 0)))
+    s, _, d = xs.shape
+    # √b is applied on device inside the per-node step; straggler sketches
+    # come back as zero rows — zero singular values, inert in the SVD below.
+    sketches = np.asarray(local_relaxed_coresets(xs, r1, b_full=rec.b_full, executor=ex))
+    y = sketches.reshape(s * r1, d)
     basis = centralized_pca(jnp.asarray(y), r)
     cost = float(pca_cost(jnp.asarray(points), basis, impl=impl))
     return ResilientPCAOutput(
-        basis=np.asarray(basis), cost=cost, r1=r1, recovery=rec, sketch_rows=y.shape[0]
+        basis=np.asarray(basis), cost=cost, r1=r1, recovery=rec,
+        # Communication proxy: only contributing nodes actually send rows.
+        sketch_rows=contributing * r1,
     )

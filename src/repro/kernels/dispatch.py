@@ -27,15 +27,24 @@ per-op magic numbers (``1 << 14`` / ``1 << 16`` cutoffs, ``_pick_blocks``):
   instead of materializing an ``(n, k)`` intermediate.
 
 On top of the model sits an optional *measured* autotune cache
-(:func:`tuned_block_config`), keyed on ``(op, backend, shape-bucket, dtype)``
-and enabled with ``REPRO_AUTOTUNE=1``: candidate block configs are timed on
-synthetic inputs once per bucket and the winner is cached for the process.
+(:func:`tuned_block_config`), keyed on ``(op, backend, device-kind,
+shape-bucket, dtype)`` and enabled with ``REPRO_AUTOTUNE=1``: candidate block
+configs are timed on synthetic inputs once per bucket and the winner is
+cached for the process **and persisted to disk**, so a later process on the
+same (backend, device kind) — e.g. every TPU run after the first — loads the
+measured winners instead of re-measuring.  One JSON file per (backend,
+device kind) under ``~/.cache/repro`` by default; ``REPRO_AUTOTUNE_CACHE``
+overrides the directory (``0``/``off`` disables persistence).  A corrupted
+or foreign cache file is ignored and overwritten by the next measurement.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import re
+import tempfile
 import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -43,10 +52,13 @@ import jax
 
 __all__ = [
     "BlockConfig",
+    "autotune_cache_dir",
+    "autotune_cache_file",
     "autotune_cache_info",
     "autotune_enabled",
     "backend",
     "clear_autotune_cache",
+    "device_kind",
     "dispatch",
     "impl_names",
     "interpret_enabled",
@@ -66,6 +78,7 @@ __all__ = [
 # value seen when its shape was first traced.
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 # Default budgets of the shared sizing model.  VMEM_BUDGET bounds the per-tile
 # working set of the Pallas kernels (a conservative quarter of a TPU core's
@@ -81,6 +94,20 @@ _SUBLANE = 8
 def backend() -> str:
     """The JAX default backend ("cpu" | "gpu" | "tpu")."""
     return jax.default_backend()
+
+
+def device_kind() -> str:
+    """Filesystem-safe kind of device 0 (e.g. "cpu", "TPU-v4", "NVIDIA-A100").
+
+    Finer-grained than :func:`backend`: measured autotune winners transfer
+    between processes only within the same hardware generation, so the
+    persistent cache is keyed on (backend, device kind).
+    """
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # pragma: no cover - no devices initialized
+        kind = "unknown"
+    return re.sub(r"[^A-Za-z0-9_.-]+", "-", str(kind)).strip("-") or "unknown"
 
 
 def interpret_enabled() -> bool:
@@ -250,17 +277,149 @@ def shape_bucket(v: int) -> int:
 
 
 _AUTOTUNE_CACHE: Dict[tuple, BlockConfig] = {}
-_AUTOTUNE_STATS = {"hits": 0, "misses": 0, "measured": 0, "errors": 0}
+_AUTOTUNE_STATS = {
+    "hits": 0, "misses": 0, "measured": 0, "errors": 0,
+    "disk_loaded": 0, "disk_errors": 0,
+}
+# Which persistent file the in-memory cache has been hydrated from (None =
+# not yet).  Re-checked per lookup so a monkeypatched env var / device kind
+# (tests) or a cleared cache triggers a fresh load.
+_PERSIST_LOADED_FROM: Optional[str] = None
+_PERSIST_VERSION = 1
 
 
 def clear_autotune_cache() -> None:
+    """Forget all in-memory winners and stats (the on-disk cache survives;
+    delete :func:`autotune_cache_file` to force re-measurement on disk too)."""
+    global _PERSIST_LOADED_FROM
     _AUTOTUNE_CACHE.clear()
+    _PERSIST_LOADED_FROM = None
     for k in _AUTOTUNE_STATS:
         _AUTOTUNE_STATS[k] = 0
 
 
 def autotune_cache_info() -> dict:
     return {"entries": dict(_AUTOTUNE_CACHE), **_AUTOTUNE_STATS}
+
+
+# ------------------------------------------------- persistent autotune cache
+
+
+def autotune_cache_dir() -> Optional[str]:
+    """Directory for persisted winners; None disables persistence.
+
+    ``REPRO_AUTOTUNE_CACHE`` overrides (``0``/``off``/``none`` to disable);
+    default is ``~/.cache/repro``.
+    """
+    v = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if v is not None:
+        if v.strip().lower() in ("", "0", "off", "none", "false"):
+            return None
+        return os.path.expanduser(v)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro")
+
+
+def autotune_cache_file() -> Optional[str]:
+    """Path of the persistent cache for the CURRENT (backend, device kind).
+
+    One file per hardware flavour keeps winners measured on one machine from
+    leaking onto different silicon: a TPU-v4 pod and the CPU smoke-test
+    runner never read each other's tables.
+    """
+    d = autotune_cache_dir()
+    if d is None:
+        return None
+    return os.path.join(d, f"autotune-{backend()}-{device_kind()}.json")
+
+
+def _persist_load() -> None:
+    """Hydrate the in-memory cache from disk (idempotent per file path).
+
+    Any malformed, unreadable, or foreign (backend/device-kind mismatch)
+    file is ignored — the caller falls through to re-measurement and the
+    next save overwrites the bad file.
+    """
+    global _PERSIST_LOADED_FROM
+    path = autotune_cache_file()
+    if path is None or path == _PERSIST_LOADED_FROM:
+        return
+    _PERSIST_LOADED_FROM = path
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if (
+            payload.get("version") != _PERSIST_VERSION
+            or payload.get("backend") != backend()
+            or payload.get("device_kind") != device_kind()
+        ):
+            raise ValueError("cache file is for a different build or device")
+        loaded = 0
+        for e in payload["entries"]:
+            key = (
+                str(e["op"]), backend(), device_kind(),
+                tuple(int(s) for s in e["shapes"]), str(e["dtype"]),
+            )
+            cfg = BlockConfig(bn=int(e["bn"]), bk=int(e["bk"]))
+            if key not in _AUTOTUNE_CACHE:  # in-process winners take priority
+                _AUTOTUNE_CACHE[key] = cfg
+                loaded += 1
+        _AUTOTUNE_STATS["disk_loaded"] += loaded
+    except FileNotFoundError:
+        pass
+    except Exception:
+        _AUTOTUNE_STATS["disk_errors"] += 1
+
+
+def _persist_save() -> None:
+    """Write all in-memory winners for the current (backend, device kind)
+    atomically (tmp file + rename); persistence failures never fail the op.
+
+    Disk entries this process has not seen (a concurrent process measured a
+    different shape bucket between our load and this save) are merged back
+    in rather than clobbered; in-memory winners take priority on conflicts.
+    """
+    path = autotune_cache_file()
+    if path is None:
+        return
+    b, kind = backend(), device_kind()
+    merged = {
+        (op, tuple(shapes), dtype): cfg
+        for (op, kb, kk, shapes, dtype), cfg in _AUTOTUNE_CACHE.items()
+        if kb == b and kk == kind
+    }
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        # Same gate as _persist_load: never launder entries from a corrupt,
+        # stale-version, or foreign-device file back in under a valid header.
+        if (
+            payload.get("version") == _PERSIST_VERSION
+            and payload.get("backend") == b
+            and payload.get("device_kind") == kind
+        ):
+            for e in payload["entries"]:
+                k = (str(e["op"]), tuple(int(s) for s in e["shapes"]), str(e["dtype"]))
+                merged.setdefault(k, BlockConfig(bn=int(e["bn"]), bk=int(e["bk"])))
+    except Exception:
+        pass  # unreadable/corrupt file: overwritten below
+    entries = [
+        {"op": op, "shapes": list(shapes), "dtype": dtype, "bn": cfg.bn, "bk": cfg.bk}
+        for (op, shapes, dtype), cfg in sorted(merged.items())
+    ]
+    payload = {
+        "version": _PERSIST_VERSION, "backend": b, "device_kind": kind,
+        "entries": entries,
+    }
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path), prefix=".autotune-", suffix=".tmp"
+        )
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        _AUTOTUNE_STATS["disk_errors"] += 1
 
 
 def _time_once(fn: Callable[[], Any], *, reps: int = 3) -> float:
@@ -296,13 +455,20 @@ def tuned_block_config(
 
     Returns the analytic ``default`` unless measured autotuning is enabled
     (``REPRO_AUTOTUNE=1``) and a ``bench`` factory is provided, in which case
-    each candidate is timed once per ``(op, backend, shape-bucket, dtype)``
-    key and the winner cached for the life of the process.
+    each candidate is timed once per ``(op, backend, device-kind,
+    shape-bucket, dtype)`` key and the winner cached for the life of the
+    process AND persisted to disk (see :func:`autotune_cache_file`), so later
+    processes on the same hardware skip the measurement entirely.
 
     ``bench(cfg)`` must return a zero-arg callable running the op with that
     config on representative (synthetic) inputs.
     """
-    key = (op, backend(), tuple(shape_bucket(s) for s in shapes), str(dtype))
+    if autotune_enabled():
+        # Hydrate measured winners from previous processes on this hardware
+        # before deciding whether to measure.  Gated on REPRO_AUTOTUNE so
+        # plain runs keep the pure analytic model (deterministic, no disk IO).
+        _persist_load()
+    key = (op, backend(), device_kind(), tuple(shape_bucket(s) for s in shapes), str(dtype))
     cached = _AUTOTUNE_CACHE.get(key)
     if cached is not None:
         _AUTOTUNE_STATS["hits"] += 1
@@ -328,4 +494,5 @@ def tuned_block_config(
             if t < best_t:
                 best, best_t = cand, t
     _AUTOTUNE_CACHE[key] = best
+    _persist_save()
     return best

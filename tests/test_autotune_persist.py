@@ -1,0 +1,153 @@
+"""Persistent autotune cache: roundtrip, device-kind isolation, corruption.
+
+These drive :func:`repro.kernels.dispatch.tuned_block_config` with a toy
+bench (no real kernels) so they run in milliseconds; the two-process
+behaviour is simulated by clearing the in-memory cache between calls — the
+disk file is the only state that survives a ``clear_autotune_cache()``,
+exactly like a process restart.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import dispatch
+
+
+@pytest.fixture(autouse=True)
+def _isolated(tmp_path, monkeypatch):
+    monkeypatch.setenv(dispatch.AUTOTUNE_ENV, "1")
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(tmp_path / "cache"))
+    dispatch.clear_autotune_cache()
+    yield
+    dispatch.clear_autotune_cache()
+
+
+def _measure(op="persist_op", shapes=(1000, 64)):
+    calls = []
+    cands = [dispatch.BlockConfig(8, 64), dispatch.BlockConfig(8, 128)]
+
+    def bench(cfg):
+        calls.append(cfg)
+        return lambda: None
+
+    cfg = dispatch.tuned_block_config(
+        op, shapes, jnp.float32, default=cands[0], candidates=cands, bench=bench
+    )
+    return cfg, calls
+
+
+def test_roundtrip_write_then_load_without_remeasure():
+    cfg1, calls1 = _measure()
+    assert len(calls1) == 2, "both candidates must be timed on a cold cache"
+    path = dispatch.autotune_cache_file()
+    assert path is not None and os.path.exists(path)
+    payload = json.load(open(path))
+    assert payload["backend"] == dispatch.backend()
+    assert payload["device_kind"] == dispatch.device_kind()
+    assert payload["entries"], "measured winner must be persisted"
+
+    # "Second process": only the disk file survives the clear.
+    dispatch.clear_autotune_cache()
+    cfg2, calls2 = _measure()
+    assert calls2 == [], "winner must load from disk, not re-measure"
+    assert cfg2 == cfg1
+    info = dispatch.autotune_cache_info()
+    assert info["disk_loaded"] >= 1 and info["measured"] == 0 and info["hits"] == 1
+
+
+def test_key_isolation_across_device_kinds(monkeypatch):
+    _measure()
+    file_a = dispatch.autotune_cache_file()
+    real_kind = dispatch.device_kind
+
+    # Same backend, different silicon: winners must not transfer.
+    monkeypatch.setattr(dispatch, "device_kind", lambda: "TPU-v99")
+    dispatch.clear_autotune_cache()
+    file_b = dispatch.autotune_cache_file()
+    assert file_b != file_a, "cache file must be keyed on device kind"
+    cfg_b, calls_b = _measure()
+    assert len(calls_b) == 2, "foreign device kind must re-measure"
+    assert os.path.exists(file_a) and os.path.exists(file_b)
+
+    # And back: the original kind still loads its own winners untouched.
+    monkeypatch.setattr(dispatch, "device_kind", real_kind)
+    dispatch.clear_autotune_cache()
+    _, calls_back = _measure()
+    assert calls_back == []
+
+
+@pytest.mark.parametrize(
+    "garbage",
+    [
+        b"{ not json at all",
+        json.dumps({"version": 999, "entries": []}).encode(),
+        json.dumps({"version": 1, "backend": "cpu", "device_kind": "other",
+                    "entries": []}).encode(),
+        json.dumps({"version": 1, "entries": [{"op": 1}]}).encode(),
+    ],
+    ids=["syntax", "version", "foreign-kind", "schema"],
+)
+def test_corrupted_cache_file_falls_back_to_measurement(garbage):
+    path = dispatch.autotune_cache_file()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(garbage)
+    cfg, calls = _measure()
+    assert len(calls) == 2, "corrupt cache must trigger re-measurement"
+    info = dispatch.autotune_cache_info()
+    assert info["disk_errors"] >= 1 or info["disk_loaded"] == 0
+    # The re-measurement heals the file: it is valid and loadable again.
+    payload = json.load(open(path))
+    assert payload["version"] == dispatch._PERSIST_VERSION
+    dispatch.clear_autotune_cache()
+    _, calls2 = _measure()
+    assert calls2 == []
+
+
+def test_save_never_launders_foreign_entries():
+    """A foreign-device file at our path must be overwritten, not merged:
+    re-stamping its entries under a valid header would hand the next process
+    block configs tuned for different silicon."""
+    path = dispatch.autotune_cache_file()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({
+            "version": dispatch._PERSIST_VERSION, "backend": dispatch.backend(),
+            "device_kind": "some-other-chip",
+            "entries": [{"op": "foreign_op", "shapes": [64], "dtype": "float32",
+                         "bn": 8, "bk": 8}],
+        }, f)
+    _measure()  # rejects the foreign file, measures, saves
+    payload = json.load(open(path))
+    ops = {e["op"] for e in payload["entries"]}
+    assert "foreign_op" not in ops, "foreign entries must not be re-stamped"
+    assert payload["device_kind"] == dispatch.device_kind()
+
+
+def test_persistence_disabled_by_env(monkeypatch, tmp_path):
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, "off")
+    dispatch.clear_autotune_cache()
+    assert dispatch.autotune_cache_file() is None
+    _, calls = _measure()
+    assert len(calls) == 2
+    # Nothing written anywhere under the (unset) tmp dir; a fresh "process"
+    # re-measures because no disk state exists.
+    dispatch.clear_autotune_cache()
+    _, calls2 = _measure()
+    assert len(calls2) == 2
+
+
+def test_in_process_winner_beats_stale_disk_entry():
+    """In-memory winners take priority over disk on hydration."""
+    cfg, _ = _measure()
+    path = dispatch.autotune_cache_file()
+    payload = json.load(open(path))
+    payload["entries"][0]["bk"] = 9999  # stale/foreign value on disk
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    # Same process: in-memory entry wins without consulting the disk.
+    cfg2, calls = _measure()
+    assert calls == [] and cfg2 == cfg

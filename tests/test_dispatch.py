@@ -21,6 +21,17 @@ from repro.kernels.weighted_segsum import ref as ss_ref
 ALL_OPS = ("pairwise_sqdist", "assign_min", "weighted_segsum", "flash_attention")
 
 
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Point the persistent autotune cache at a fresh per-test directory so
+    winners persisted by earlier runs (or other tests) can't mask the
+    measurement behaviour these tests assert on."""
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(tmp_path / "autotune"))
+    dispatch.clear_autotune_cache()
+    yield
+    dispatch.clear_autotune_cache()
+
+
 # ------------------------------------------------------------ auto policy
 
 

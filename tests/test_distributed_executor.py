@@ -1,0 +1,180 @@
+"""Executor-seam tests: mesh (shard_map) vs local (vmap) must agree.
+
+The in-process tests run on whatever devices the main pytest process sees
+(1 CPU device — the smoke tests depend on that staying true), which already
+exercises the full shard_map machinery on a 1-device mesh.  The end-to-end
+parity test spawns a subprocess with 8 forced host devices (same pattern as
+test_launch.py) and pins the Fig-1 workload's cost ratio between executors
+at 1e-5.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------- in-process (1 dev)
+
+
+def _small_problem(n=300, s=6, t=2, seed=0):
+    from repro.core import bernoulli_assignment, fixed_count_stragglers
+    from repro.data.synthetic import gaussian_mixture
+
+    pts, _, _ = gaussian_mixture(n, 5, 3, rng=np.random.default_rng(seed))
+    a = bernoulli_assignment(n, s, ell=2.0, rng=np.random.default_rng(seed + 1))
+    alive = fixed_count_stragglers(s, t, np.random.default_rng(seed + 2))
+    return pts, a, alive
+
+
+def test_get_executor_resolution():
+    from repro.core import Executor, LocalExecutor, get_executor
+
+    assert isinstance(get_executor(None), LocalExecutor)
+    assert get_executor("local") is get_executor(None), "singleton reuse"
+    mesh = get_executor("mesh")
+    assert isinstance(mesh, Executor) and mesh.name == "mesh"
+    assert get_executor(mesh) is mesh
+    with pytest.raises(ValueError):
+        get_executor("cluster-of-toasters")
+
+
+def test_kmedian_mesh_matches_local_single_device():
+    from repro.core import resilient_kmedian
+
+    pts, a, alive = _small_problem()
+    out_l = resilient_kmedian(pts, 4, a, alive, local_iters=5, coord_iters=8)
+    out_m = resilient_kmedian(
+        pts, 4, a, alive, local_iters=5, coord_iters=8, executor="mesh"
+    )
+    assert out_m.cost == pytest.approx(out_l.cost, rel=1e-5)
+    np.testing.assert_allclose(out_m.centers, out_l.centers, rtol=1e-5, atol=1e-6)
+
+
+def test_pca_and_coreset_mesh_match_local_single_device():
+    from repro.core import resilient_coreset, resilient_pca
+
+    pts, a, alive = _small_problem(seed=7)
+    p_l = resilient_pca(pts, 2, 0.5, a, alive)
+    p_m = resilient_pca(pts, 2, 0.5, a, alive, executor="mesh")
+    assert p_m.cost == pytest.approx(p_l.cost, rel=1e-5, abs=1e-7)
+    assert p_m.sketch_rows == p_l.sketch_rows
+
+    cs_l = resilient_coreset(pts, 4, 32, a, alive)
+    cs_m = resilient_coreset(pts, 4, 32, a, alive, executor="mesh")
+    np.testing.assert_allclose(
+        np.asarray(cs_m.weights), np.asarray(cs_l.weights), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(cs_m.points), np.asarray(cs_l.points), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_resilient_cost_lemma3_band_both_executors():
+    """Σ b·cost_i must bracket the true cost per Lemma 3 (b from the min-δ
+    LP: cost ≤ estimate ≤ (1+δ)·cost on feasible patterns)."""
+    import jax.numpy as jnp
+
+    from repro.core import clustering_cost, lloyd, resilient_cost
+    from repro.core import fractional_repetition_assignment, fixed_count_stragglers
+    from repro.data.synthetic import gaussian_mixture
+    import jax
+
+    pts, _, _ = gaussian_mixture(240, 4, 3, rng=np.random.default_rng(3))
+    a = fractional_repetition_assignment(len(pts), 6, 2)  # exact band: δ = 0
+    alive = fixed_count_stragglers(6, 1, np.random.default_rng(4))
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), 4, iters=5).centers
+    )
+    true = float(clustering_cost(jnp.asarray(pts), jnp.asarray(centers)))
+    for ex in ("local", "mesh"):
+        est = resilient_cost(pts, centers, a, alive, executor=ex)
+        assert true * (1.0 - 1e-5) <= est <= true * (1.0 + 1e-4), ex
+
+
+def test_all_dead_raises_everywhere():
+    """Every distributed entry point must refuse an all-straggler pattern —
+    a silent 0.0 'estimate' is indistinguishable from a perfect result."""
+    from repro.core import (
+        resilient_coreset, resilient_cost, resilient_kmedian, resilient_pca,
+        ignore_stragglers_kmedian,
+    )
+
+    pts, a, _ = _small_problem()
+    dead = np.zeros(a.num_nodes, dtype=bool)
+    centers = np.zeros((3, pts.shape[1]), np.float32)
+    for call in (
+        lambda: resilient_kmedian(pts, 3, a, dead, local_iters=2, coord_iters=2),
+        lambda: ignore_stragglers_kmedian(pts, 3, a, dead, local_iters=2, coord_iters=2),
+        lambda: resilient_pca(pts, 2, 0.5, a, dead),
+        lambda: resilient_coreset(pts, 3, 16, a, dead),
+        lambda: resilient_cost(pts, centers, a, dead),
+    ):
+        with pytest.raises(ValueError, match="no surviving"):
+            call()
+
+
+def test_straggler_pattern_is_runtime_data_not_shape():
+    """Two different alive masks must reuse the same compiled mesh step —
+    recompiling per straggler pattern would defeat the whole design."""
+    from repro.core import resilient_kmedian, fixed_count_stragglers
+    from repro.core.executor import get_executor
+
+    pts, a, _ = _small_problem(seed=11)
+    ex = get_executor("mesh")
+    alive1 = fixed_count_stragglers(a.num_nodes, 1, np.random.default_rng(0))
+    alive2 = fixed_count_stragglers(a.num_nodes, 2, np.random.default_rng(5))
+    resilient_kmedian(pts, 4, a, alive1, local_iters=3, coord_iters=4, executor=ex)
+    n_compiled = len(ex._jitted)
+    out = resilient_kmedian(
+        pts, 4, a, alive2, local_iters=3, coord_iters=4, executor=ex
+    )
+    assert len(ex._jitted) == n_compiled, "straggler change must not re-lower"
+    assert np.isfinite(out.cost)
+
+
+# ------------------------------------------------ 8-device subprocess parity
+
+
+def test_fig1_cost_parity_mesh_vs_local_8_devices():
+    """Satellite requirement: mesh-executor vs local-executor cost parity on
+    the Fig-1 workload under 8 simulated host devices, tolerance ≤ 1e-5 on
+    the cost ratio."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        assert jax.device_count() == 8
+        from repro.core import (bernoulli_assignment, fixed_count_stragglers,
+                                resilient_kmedian, ignore_stragglers_kmedian,
+                                singleton_assignment)
+        from repro.data.synthetic import franti_s1_like
+        n, s, t, k = 600, 10, 3, 8
+        pts, _, _ = franti_s1_like(n)
+        alive = fixed_count_stragglers(s, t, np.random.default_rng(0))
+        a = bernoulli_assignment(n, s, ell=2.0, rng=np.random.default_rng(1))
+        for fn, asn in ((resilient_kmedian, a),
+                        (ignore_stragglers_kmedian, singleton_assignment(n, s))):
+            kw = dict(local_iters=6, coord_iters=10)
+            loc = fn(pts, k, asn, alive, **kw)
+            mesh = fn(pts, k, asn, alive, executor="mesh", **kw)
+            ratio = mesh.cost / loc.cost
+            print(fn.__name__, loc.cost, mesh.cost, ratio)
+            assert abs(ratio - 1.0) <= 1e-5, (fn.__name__, ratio)
+        print("PARITY_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=540, env=env,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "PARITY_OK" in out.stdout

@@ -1,0 +1,79 @@
+"""Markdown link lint: every relative link in the doc set must resolve.
+
+Scans the repo's markdown surface (README.md, docs/*.md, ROADMAP.md — the
+files `make docs-check` guards) for inline links/images and verifies that
+relative targets exist on disk.  External (http/https/mailto) and pure
+anchor links are skipped.  Exit code 1 with one line per broken link.
+
+    python tools/check_docs.py [files...]
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+DEFAULT_DOCS = ["README.md", "ROADMAP.md", "PAPER.md", "docs/*.md"]
+
+# Inline [text](target) / ![alt](target); stops at the first ')' or space
+# (titles like [t](x "y") keep only the path part).
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(text: str):
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if _CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: str, repo_root: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in iter_links(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target_path = target.split("#", 1)[0]
+        if not target_path:
+            continue
+        resolved = (
+            os.path.join(repo_root, target_path.lstrip("/"))
+            if target_path.startswith("/")
+            else os.path.join(base, target_path)
+        )
+        if not os.path.exists(resolved):
+            errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    patterns = argv or DEFAULT_DOCS
+    files: list[str] = []
+    for pat in patterns:
+        matches = sorted(glob.glob(os.path.join(repo_root, pat)))
+        if not matches and not glob.has_magic(pat):
+            print(f"docs-check: missing doc file {pat}", file=sys.stderr)
+            return 1
+        files.extend(matches)
+    errors = []
+    for path in files:
+        errors.extend(check_file(path, repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"docs-check: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
