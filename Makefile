@@ -4,12 +4,12 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all docs-check bench-kernels bench
+.PHONY: test test-all docs-check bench-kernels bench-scenarios bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: docs-check  ## everything, including compile-heavy slow-marked smoke tests
+test-all: docs-check bench-scenarios  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
 
 docs-check:  ## markdown link lint + the quickstart must run end to end
@@ -18,6 +18,9 @@ docs-check:  ## markdown link lint + the quickstart must run end to end
 
 bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 	$(PY) -m benchmarks.run kernels --emit BENCH_kernels.json
+
+bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor) → BENCH_scenarios.json
+	timeout 300 $(PY) -m benchmarks.run scenarios --emit BENCH_scenarios.json
 
 bench:  ## full benchmark sweep
 	$(PY) -m benchmarks.run

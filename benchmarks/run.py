@@ -15,7 +15,15 @@ import json
 import os
 import sys
 
-from . import bench_approx, bench_assignment, bench_coreset, bench_fig1, bench_kernels, bench_training
+from . import (
+    bench_approx,
+    bench_assignment,
+    bench_coreset,
+    bench_fig1,
+    bench_kernels,
+    bench_scenarios,
+    bench_training,
+)
 from .common import emit
 
 BENCHES = {
@@ -25,6 +33,7 @@ BENCHES = {
     "coreset": bench_coreset.run,
     "training": bench_training.run,
     "kernels": bench_kernels.run,
+    "scenarios": bench_scenarios.run,
 }
 
 

@@ -16,16 +16,29 @@ from .assignment import (  # noqa: F401
 from .recovery import (  # noqa: F401
     RecoveryResult,
     jax_recovery,
+    jax_recovery_masked,
     lp_recovery,
     nnls_recovery,
     solve_recovery,
     uniform_recovery,
 )
 from .stragglers import (  # noqa: F401
+    AdversarialScenario,
+    DeadlineScenario,
     DeadlineStragglerSimulator,
+    FixedCountScenario,
+    IIDScenario,
+    ScenarioStep,
+    StragglerScenario,
     adversarial_stragglers,
     fixed_count_stragglers,
+    make_scenario,
     random_stragglers,
+)
+from .resilience import (  # noqa: F401
+    ElasticPolicy,
+    ResilienceSession,
+    SessionStats,
 )
 from .aggregation import (  # noqa: F401
     mom_combine,

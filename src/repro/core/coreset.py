@@ -13,7 +13,7 @@ Sampling ``m`` points with probabilities ``p_i ∝ σ_i`` and reweighting by
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -91,12 +91,13 @@ def resilient_coreset(
     assignment,
     alive,
     *,
-    recovery_method: str = "auto",
+    recovery_method: Optional[str] = None,
     squared: bool = True,
     bicriteria_iters: int = 5,
     seed: int = 0,
     impl: str = "auto",
     executor: Union[None, str, Executor] = None,
+    session=None,
 ) -> Coreset:
     """Straggler-resilient distributed coreset (the communication primitive of
     Algorithm 2): every node samples an ``m_per_node``-point sensitivity
@@ -110,7 +111,8 @@ def resilient_coreset(
     from .kmedian import prepare_resilient_run
 
     points, alive, rec, ex, xs, ws = prepare_resilient_run(
-        points, assignment, alive, recovery_method=recovery_method, executor=executor
+        points, assignment, alive, recovery_method=recovery_method,
+        executor=executor, session=session,
     )
     s, _, d = xs.shape
     keys = jax.random.split(jax.random.PRNGKey(seed), s)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from .aggregation import resilient_sum
+from .recovery import jax_recovery_masked
 
 __all__ = ["Executor", "LocalExecutor", "get_executor"]
 
@@ -66,6 +67,47 @@ class Executor:
         """
         raise NotImplementedError
 
+    def resilient_reduce_masked(
+        self,
+        fn: Callable,
+        node_args: Sequence[Any],
+        broadcast_args: Sequence[Any],
+        A,
+        alive,
+        *,
+        iters: int = 300,
+    ):
+        """Lemma-3 combine with the recovery weights solved ON DEVICE.
+
+        The compiled step takes the full assignment matrix ``A`` and the
+        boolean ``alive`` mask as runtime arrays, runs
+        :func:`repro.core.recovery.jax_recovery_masked` inside the step, and
+        combines — so a previously-unseen straggler pattern costs zero host
+        solves and zero recompiles.  Returns ``(reduced, b_full)``; the
+        weights come back so callers can parity-check against the host LP
+        without a second solve.
+        """
+        raise NotImplementedError
+
+    # --------------------------------------------------- placement helpers
+    # Sessions (repro.core.resilience) keep node-stacked inputs resident
+    # across rounds; these helpers make placement explicit so only changed
+    # blocks move after an elastic re-assignment.
+
+    def place_node_stacked(self, arr):
+        """Place a node-stacked array where this executor wants it (padded
+        to the executor's node-axis granularity where applicable)."""
+        return jnp.asarray(arr)
+
+    def place_broadcast(self, arr):
+        """Place an array replicated/shared across all nodes."""
+        return jnp.asarray(arr)
+
+    def update_node_rows(self, arr, rows: Sequence[int], new_rows):
+        """Return ``arr`` with ``arr[rows[i]] = new_rows[i]`` applied, moving
+        only the storage that actually owns those rows."""
+        raise NotImplementedError
+
 
 class LocalExecutor(Executor):
     """All nodes simulated in one process as a single vmapped batch."""
@@ -92,6 +134,34 @@ class LocalExecutor(Executor):
     def resilient_reduce(self, fn, node_args, broadcast_args, b_full):
         per_node = self.map_nodes(fn, node_args, broadcast_args)
         return resilient_sum(per_node, jnp.asarray(b_full, jnp.float32))
+
+    def _compiled_masked(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
+        key = ("masked", fn, n_node, n_bcast, iters)
+        if key not in self._jitted:
+            in_axes = (0,) * n_node + (None,) * n_bcast
+            inner = jax.vmap(fn, in_axes=in_axes)
+
+            def step(A, alive, *args):
+                b_full = jax_recovery_masked(A, alive, iters=iters)
+                per_node = inner(*args)
+                return resilient_sum(per_node, b_full), b_full
+
+            self._jitted[key] = jax.jit(step)
+        return self._jitted[key]
+
+    def resilient_reduce_masked(
+        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300
+    ):
+        node_args = tuple(jnp.asarray(a) for a in node_args)
+        broadcast_args = tuple(jnp.asarray(a) for a in broadcast_args)
+        return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
+            jnp.asarray(A, jnp.float32), jnp.asarray(alive, bool),
+            *node_args, *broadcast_args,
+        )
+
+    def update_node_rows(self, arr, rows, new_rows):
+        idx = jnp.asarray(list(rows), jnp.int32)
+        return jnp.asarray(arr).at[idx].set(jnp.asarray(new_rows))
 
 
 _LOCAL_SINGLETON: Optional[LocalExecutor] = None

@@ -162,9 +162,10 @@ def resilient_cost(
     alive,
     *,
     median: bool = False,
-    recovery_method: str = "auto",
+    recovery_method: Optional[str] = None,
     impl: str = "auto",
     executor=None,
+    session=None,
 ) -> float:
     """Straggler-resilient estimate of cost(P, C) by Lemma 3.
 
@@ -173,12 +174,15 @@ def resilient_cost(
     satisfies ``cost ≤ Σ b_i·cost_i ≤ (1+δ)·cost``.  With the mesh executor
     the per-shard costs AND the weighted combine (a ``psum`` over the node
     axis, see :func:`repro.core.aggregation.resilient_psum`) run entirely on
-    device — only the final replicated scalar reaches the host.
+    device — only the final replicated scalar reaches the host.  For the
+    multi-round form with the recovery solve fused into the compiled step,
+    see :meth:`repro.core.resilience.ResilienceSession.step_cost`.
     """
     from .kmedian import prepare_resilient_run
 
     points, alive, rec, ex, xs, ws = prepare_resilient_run(
-        points, assignment, alive, recovery_method=recovery_method, executor=executor
+        points, assignment, alive, recovery_method=recovery_method,
+        executor=executor, session=session,
     )
     est = ex.resilient_reduce(
         _local_cost_fn(median, impl),

@@ -34,7 +34,7 @@ import numpy as np
 from . import kmeans
 from .assignment import Assignment
 from .executor import Executor, get_executor
-from .recovery import RecoveryResult, solve_recovery
+from .recovery import RecoveryResult
 
 __all__ = [
     "pack_local_shards",
@@ -82,23 +82,55 @@ def prepare_resilient_run(
     assignment: Assignment,
     alive,
     *,
-    recovery_method: str = "auto",
+    recovery_method: Optional[str] = None,
     executor: Union[None, str, Executor] = None,
+    session=None,
 ):
     """Shared prelude of every distributed algorithm: dtype coercion,
     recovery solve, all-dead guard, executor resolution, shard packing.
 
+    The state lives in a :class:`repro.core.resilience.ResilienceSession` —
+    pass ``session=`` to share the per-pattern recovery cache and packed
+    shards across calls (and algorithms); otherwise a throwaway session
+    reproduces the old per-call behaviour (``recovery_method`` defaults to
+    ``"auto"``).  When a session is given it owns the (possibly
+    elastically-patched) assignment and the executor, and any explicitly
+    passed ``assignment``/``executor``/``recovery_method`` that contradicts
+    the session's is an error — silently preferring one side would return
+    plausible results computed against the wrong matrix/device/solver.  (Any
+    assignment from the session's own lineage — the original or a patched
+    successor — is accepted, so callers may keep passing their pre-patch
+    reference mid-run.)
+
     Returns ``(points, alive, rec, ex, xs, ws)``.  Keeping this in one place
     keeps the guard/dtype handling from drifting between Algorithms 1–3.
     """
-    points = np.asarray(points, dtype=np.float32)
-    alive = np.asarray(alive, dtype=bool)
-    rec = solve_recovery(assignment, alive, method=recovery_method)
-    if not np.any(rec.b_full > 0):
-        raise ValueError("no surviving nodes with data — cannot form union")
-    ex = get_executor(executor)
-    xs, ws = pack_local_shards(points, assignment)
-    return points, alive, rec, ex, xs, ws
+    from .resilience import ResilienceSession
+
+    if session is None:
+        session = ResilienceSession(
+            assignment, recovery_method=recovery_method or "auto", executor=executor
+        )
+    else:
+        if recovery_method is not None and recovery_method != session.recovery_method:
+            raise ValueError(
+                f"recovery_method={recovery_method!r} conflicts with the session's "
+                f"{session.recovery_method!r}; construct the ResilienceSession with "
+                "the method you want"
+            )
+        if assignment is not None and id(assignment) not in session._assignment_lineage:
+            raise ValueError(
+                "assignment= is not the session's assignment (nor a pre-patch "
+                "version of it); a session owns exactly one assignment — build "
+                "a new ResilienceSession for a different one"
+            )
+        if executor is not None and get_executor(executor) is not session.executor:
+            raise ValueError(
+                f"executor={executor!r} conflicts with the session's "
+                f"{session.executor.name!r} executor; construct the "
+                "ResilienceSession with the executor you want"
+            )
+    return session.prepare(points, alive)
 
 
 @functools.lru_cache(maxsize=None)
@@ -183,17 +215,21 @@ def resilient_kmedian(
     assignment: Assignment,
     alive: np.ndarray,
     *,
-    recovery_method: str = "auto",
+    recovery_method: Optional[str] = None,
     local_iters: int = 20,
     coord_iters: int = 40,
     seed: int = 0,
     impl: str = "auto",
     executor: Union[None, str, Executor] = None,
+    session=None,
 ) -> ResilientClusteringOutput:
     """Paper Algorithm 1, end-to-end.  ``executor`` selects local vs mesh
-    execution of the per-worker solves (see repro.core.executor)."""
+    execution of the per-worker solves (see repro.core.executor);
+    ``session`` shares recovery/pack state across calls
+    (see repro.core.resilience)."""
     points, alive, rec, ex, xs, ws = prepare_resilient_run(
-        points, assignment, alive, recovery_method=recovery_method, executor=executor
+        points, assignment, alive, recovery_method=recovery_method,
+        executor=executor, session=session,
     )
     centers, full_cost, y, wy = _coordinator_pipeline(
         points, k, xs, ws, rec.b_full, ex,

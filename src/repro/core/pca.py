@@ -139,16 +139,19 @@ def resilient_pca(
     assignment: Assignment,
     alive: np.ndarray,
     *,
-    recovery_method: str = "auto",
+    recovery_method: Optional[str] = None,
     impl: str = "auto",
     executor: Union[None, str, Executor] = None,
+    session=None,
 ) -> ResilientPCAOutput:
     """Paper Algorithm 3, end-to-end.  ``executor`` selects local vs mesh
-    execution of the per-worker sketches (see repro.core.executor)."""
+    execution of the per-worker sketches (see repro.core.executor);
+    ``session`` shares recovery/pack state across calls."""
     from .kmedian import prepare_resilient_run
 
     points, alive, rec, ex, xs, _ = prepare_resilient_run(
-        points, assignment, alive, recovery_method=recovery_method, executor=executor
+        points, assignment, alive, recovery_method=recovery_method,
+        executor=executor, session=session,
     )
     r1 = relaxed_coreset_rank(r, delta)
     contributing = int(np.sum(alive & (rec.b_full > 0)))

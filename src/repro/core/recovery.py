@@ -14,6 +14,10 @@ Three solvers:
 * :func:`jax_recovery` — on-device projected-gradient solver (jit-able,
   differentiable); useful when ``b`` must be produced inside a compiled
   step without a host round-trip (beyond paper).
+  :func:`jax_recovery_masked` is its fixed-shape form — full ``A`` plus a
+  runtime alive mask instead of the ``A_R`` submatrix — so one compiled
+  program serves EVERY straggler pattern (the hot path of
+  :class:`repro.core.resilience.ResilienceSession`).
 
 :func:`solve_recovery` dispatches and degrades gracefully: shards with zero
 alive replicas are reported via ``uncovered`` (Property 1 is infeasible then,
@@ -36,6 +40,7 @@ __all__ = [
     "lp_recovery",
     "nnls_recovery",
     "jax_recovery",
+    "jax_recovery_masked",
     "solve_recovery",
     "expand_to_all_nodes",
 ]
@@ -164,8 +169,14 @@ def nnls_recovery(
     b, _ = nnls(A_R[:, covered].T, np.full(covered.size, target))
     a = b @ A_R[:, covered]
     amin = a.min()
-    if amin > 1e-12:
-        b = b / amin  # scale the band up so the lower bound is exactly 1
+    if amin <= 1e-12:
+        # Degenerate active set: NNLS left some covered shard with
+        # (numerically) zero mass, so no rescale can reach the a ≥ 1 band.
+        # Report the infeasibility explicitly instead of returning the raw
+        # unscaled b as if it were a usable solution.
+        res = _result(A, alive_idx, b, "nnls")
+        return dataclasses.replace(res, feasible=False)
+    b = b / amin  # scale the band up so the lower bound is exactly 1
     return _result(A, alive_idx, b, "nnls")
 
 
@@ -204,6 +215,54 @@ def jax_recovery(A_R, *, iters: int = 500, lr: float = 1.0):
     covered = A_R.sum(axis=0) > 0
     amin = jnp.min(jnp.where(covered, a, jnp.inf))
     return jnp.where(amin > 1e-12, b / amin, b)
+
+
+def jax_recovery_masked(A, alive, *, iters: int = 300, lr: float = 1.0):
+    """Fixed-shape on-device recovery from a runtime alive mask.
+
+    Unlike :func:`jax_recovery` (which takes the ``A_R`` submatrix and so
+    re-traces whenever the number of alive nodes changes), this variant takes
+    the FULL ``(s, n)`` assignment and the ``(s,)`` alive mask as traced
+    values: every straggler pattern is runtime data against one compiled
+    program.  Dead rows are masked out of the gradient and their weights
+    pinned to 0; uncovered shards are masked out of the objective (their
+    target is unreachable and would otherwise drag the covered band down).
+    Returns ``b_full`` — ``(s,)`` weights with zeros at stragglers, the form
+    consumed by the executors' Lemma-3 combine.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    A = jnp.asarray(A, jnp.float32)
+    alive = jnp.asarray(alive)
+    alive_f = alive.astype(jnp.float32)
+    s, n = A.shape
+    A_m = A * alive_f[:, None]          # dead rows contribute nothing
+    covered = (A_m.sum(axis=0) > 0).astype(jnp.float32)
+    A_c = A_m * covered[None, :]        # uncovered shards leave the objective
+
+    def piter(v, _):
+        v = A_c.T @ (A_c @ v)
+        return v / jnp.maximum(jnp.linalg.norm(v), 1e-12), ()
+
+    v0 = jnp.ones((n,), jnp.float32) / jnp.sqrt(n)
+    v, _ = jax.lax.scan(piter, v0, None, length=8)
+    sigma_sq = jnp.maximum(jnp.linalg.norm(A_c @ v) ** 2, 1e-6)
+
+    def step(b, _):
+        grad = A_c @ (b @ A_c - covered)
+        b = jnp.maximum(b - (lr / sigma_sq) * grad, 0.0) * alive_f
+        return b, ()
+
+    repl = jnp.maximum(A_c.sum(axis=0), 1.0)
+    b0 = alive_f / jnp.maximum(jnp.mean(repl), 1.0)
+    b, _ = jax.lax.scan(step, b0, None, length=iters)
+    a = b @ A_c
+    amin = jnp.min(jnp.where(covered > 0, a, jnp.inf))
+    # Exact rescale so min_j a_j = 1 on covered shards; degenerate solves
+    # (amin ≈ 0, or no covered shard at all) are returned unscaled — the
+    # caller sees a < 1 and can fall back to the host LP.
+    return jnp.where((amin > 1e-12) & jnp.isfinite(amin), b / amin, b)
 
 
 def solve_recovery(

@@ -1,0 +1,432 @@
+"""Elastic resilience runtime — session state for multi-round resilient runs.
+
+The paper treats a straggler pattern as a one-shot event: draw a mask, solve
+the recovery LP, combine.  A *run* on a real cluster is a stream of patterns
+(correlated, persistent, adversarial — see :mod:`repro.core.stragglers`), and
+re-running the host prelude per call wastes exactly the state that stays
+fixed across rounds: the assignment, the packed shards, their device
+placement, and every previously-solved pattern.  :class:`ResilienceSession`
+owns that state for a whole run:
+
+* **One pattern-keyed cache** (alive-mask bytes → ``RecoveryResult``) shared
+  by every consumer — Algorithms 1–3, ``resilient_cost``, and the training
+  plan (:class:`repro.train.resilient.RedundantShardPlan`) all hit the same
+  dict instead of keeping private ones.
+* **On-device recovery for the hot path** — :meth:`step_cost` runs the whole
+  mask → :func:`~repro.core.recovery.jax_recovery_masked` → Lemma-3 combine
+  inside ONE compiled step via the executors'
+  ``resilient_reduce_masked``: a previously-unseen straggler pattern costs
+  zero host LP solves and zero recompiles.  The host LP remains the
+  offline/exact path (:meth:`recovery`) and the parity reference.
+* **Elastic re-assignment** — :meth:`observe` tracks per-node straggle
+  streaks; when persistent stragglers push some shard's healthy replica
+  count to the configured floor, the session patches the assignment
+  (re-replicates the at-risk shards onto live nodes), invalidates ONLY the
+  cache entries the patch can change, and re-places ONLY the moved node
+  blocks on the mesh (``Executor.update_node_rows``).
+
+Env knob: ``REPRO_DEVICE_RECOVERY_ITERS`` — projected-gradient iteration
+count for the on-device solver (default 300; raise for tighter δ bands).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from typing import Optional, Union
+
+import numpy as np
+
+from .assignment import Assignment
+from .executor import Executor, get_executor
+from .recovery import RecoveryResult, solve_recovery
+
+__all__ = ["ElasticPolicy", "SessionStats", "ResilienceSession"]
+
+
+def _device_iters_default() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_DEVICE_RECOVERY_ITERS", "300")))
+    except ValueError:
+        return 300
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """When and how the session re-replicates shards away from stragglers.
+
+    A node that misses ``patience`` consecutive rounds is *persistent*.  A
+    shard whose replica count over non-persistent nodes has dropped to
+    ``coverage_floor`` or below — because persistent nodes hold its other
+    replicas — is *at risk* and gets ``extra_replicas`` new replicas on the
+    least-loaded healthy nodes.
+    """
+
+    enabled: bool = True
+    patience: int = 3
+    coverage_floor: int = 1
+    extra_replicas: int = 1
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Re-solve / cache / elastic counters (emitted by bench_scenarios)."""
+
+    host_solves: int = 0       # host LP/NNLS solves (offline/exact path)
+    device_solves: int = 0     # on-device solves (fused compiled-step path)
+    cache_hits: int = 0        # pattern-cache hits across ALL consumers
+    elastic_patches: int = 0   # assignment patches applied
+    moved_node_blocks: int = 0 # node rows re-placed incrementally
+    cache_invalidations: int = 0  # entries dropped by patches
+    rounds: int = 0            # observe() calls
+    uncovered_rounds: int = 0  # rounds where some shard had no alive replica
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ResilienceSession:
+    """Owns (assignment, recovery solver, per-pattern cache, scenario stream)
+    state for a multi-round resilient run.  See the module docstring."""
+
+    def __init__(
+        self,
+        assignment: Assignment,
+        *,
+        recovery_method: str = "auto",
+        executor: Union[None, str, Executor] = None,
+        elastic: Optional[ElasticPolicy] = None,
+        device_iters: Optional[int] = None,
+    ):
+        self.assignment = assignment
+        self.recovery_method = recovery_method
+        self.executor = get_executor(executor)
+        self.elastic = elastic if elastic is not None else ElasticPolicy(enabled=False)
+        self.device_iters = device_iters or _device_iters_default()
+        self.stats = SessionStats()
+        self.version = 0  # bumped by every elastic patch
+        # Object ids of every assignment this session has owned (the original
+        # plus each elastic patch) — lets entry points reject a genuinely
+        # foreign assignment while accepting pre-patch references mid-run.
+        self._assignment_lineage = {id(assignment)}
+        self._cache: dict[bytes, RecoveryResult] = {}
+        self._streak = np.zeros(assignment.num_nodes, dtype=np.int64)
+        # Host-side packed shards, keyed by the caller's points object.
+        self._pack_src = None
+        self._pack_fp: Optional[bytes] = None
+        self._pack_version = -1
+        self._packed: Optional[tuple[np.ndarray, np.ndarray]] = None
+        self._packed_pts: Optional[np.ndarray] = None
+        # Device-resident (placed) arrays for the fused step_cost path.
+        # Keyed by its OWN source object: the host pack cache may move to a
+        # different points array (prepare() with a second dataset) without
+        # invalidating the resident placement.
+        self._resident = None  # (xs_placed, ws_placed, A_placed)
+        self._resident_src = None
+        self._resident_fp: Optional[bytes] = None
+        self._resident_version = -1
+
+    @property
+    def num_nodes(self) -> int:
+        return self.assignment.num_nodes
+
+    @property
+    def num_shards(self) -> int:
+        return self.assignment.num_shards
+
+    # ------------------------------------------------- host (exact) recovery
+
+    def recovery(self, alive: np.ndarray) -> RecoveryResult:
+        """Cached host solve for one alive pattern (LP/NNLS/uniform — the
+        offline/exact path and the parity reference for the device solver)."""
+        alive = np.asarray(alive, dtype=bool)
+        key = alive.tobytes()
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.stats.cache_hits += 1
+            return hit
+        res = solve_recovery(self.assignment, alive, method=self.recovery_method)
+        self.stats.host_solves += 1
+        self._cache[key] = res
+        return res
+
+    def recovery_weights(self, alive: np.ndarray) -> tuple[np.ndarray, RecoveryResult]:
+        """(s,) float32 b_full (zeros at stragglers) + diagnostics."""
+        res = self.recovery(alive)
+        return res.b_full.astype(np.float32), res
+
+    # -------------------------------------------------- prelude for Algs 1–3
+
+    def prepare(self, points, alive):
+        """The shared prelude of every distributed algorithm: dtype coercion,
+        cached recovery solve, all-dead guard, packed shards (cached per
+        points object and assignment version).
+
+        Returns ``(points, alive, rec, executor, xs, ws)`` — the tuple
+        :func:`repro.core.kmedian.prepare_resilient_run` used to rebuild from
+        scratch on every call.
+        """
+        alive = np.asarray(alive, dtype=bool)
+        rec = self.recovery(alive)
+        if not np.any(rec.b_full > 0):
+            raise ValueError("no surviving nodes with data — cannot form union")
+        pts32, xs, ws = self._packed_shards(points)
+        return pts32, alive, rec, self.executor, xs, ws
+
+    @staticmethod
+    def _fingerprint(points) -> bytes:
+        """Cheap content hash: identity alone would serve stale packs after
+        an in-place mutation of the caller's array (pts *= 0.5)."""
+        a = np.ascontiguousarray(np.asarray(points))
+        h = hashlib.blake2b(digest_size=16)
+        h.update(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+        return h.digest()
+
+    def _packed_shards(self, points, fp: Optional[bytes] = None):
+        fp = self._fingerprint(points) if fp is None else fp
+        if self._packed is not None and self._pack_src is points and (
+            self._pack_version == self.version and self._pack_fp == fp
+        ):
+            return self._packed_pts, *self._packed
+        from .kmedian import pack_local_shards
+
+        pts32 = np.asarray(points, dtype=np.float32)
+        xs, ws = pack_local_shards(pts32, self.assignment)
+        self._pack_src = points
+        self._pack_fp = fp
+        self._packed_pts = pts32
+        self._packed = (xs, ws)
+        self._pack_version = self.version
+        return pts32, xs, ws
+
+    # ------------------------------------------------ fused on-device path
+
+    def _ensure_resident(self, points):
+        fp = self._fingerprint(points)
+        if self._resident is not None and (
+            self._resident_version == self.version
+            and self._resident_src is points
+            and self._resident_fp == fp
+        ):
+            return self._resident
+        _, xs, ws = self._packed_shards(points, fp)
+        ex = self.executor
+        self._resident = (
+            ex.place_node_stacked(xs),
+            ex.place_node_stacked(ws),
+            ex.place_broadcast(self.assignment.matrix.astype(np.float32)),
+        )
+        self._resident_src = points
+        self._resident_fp = fp
+        self._resident_version = self.version
+        return self._resident
+
+    def step_cost(
+        self,
+        points,
+        centers,
+        alive,
+        *,
+        median: bool = False,
+        impl: str = "auto",
+    ) -> float:
+        """Lemma-3 cost estimate with the recovery solve INSIDE the compiled
+        step — the multi-round hot path.  The alive mask is runtime data: a
+        new straggler pattern triggers no host solve and no recompile."""
+        from .kmeans import _local_cost_fn
+
+        alive = np.asarray(alive, dtype=bool)
+        if not alive.any():
+            # Same contract as the host path: a silent 0.0 "estimate" for an
+            # all-straggler round is indistinguishable from a perfect result.
+            raise ValueError("no surviving nodes with data — cannot form union")
+        xs_p, ws_p, A_p = self._ensure_resident(points)
+        import jax.numpy as jnp
+
+        est, _b = self.executor.resilient_reduce_masked(
+            _local_cost_fn(median, impl),
+            (xs_p, ws_p),
+            (jnp.asarray(centers, jnp.float32),),
+            A_p,
+            alive,
+            iters=self.device_iters,
+        )
+        self.stats.device_solves += 1
+        return float(est)
+
+    def device_recovery_weights(self, alive) -> np.ndarray:
+        """(s,) b_full from the on-device solver (no host LP).  Standalone
+        form of the solve that :meth:`step_cost` fuses into its step — used
+        by consumers that need the weights themselves (e.g. gradient
+        reweighting) without a host round-trip on unseen patterns."""
+        from .recovery import jax_recovery_masked
+
+        b = jax_recovery_masked(
+            self.assignment.matrix.astype(np.float32),
+            np.asarray(alive, dtype=bool),
+            iters=self.device_iters,
+        )
+        self.stats.device_solves += 1
+        return np.asarray(b)
+
+    # ------------------------------------------------- algorithm entry points
+
+    def kmedian(self, points, k: int, alive, **kw):
+        from .kmedian import resilient_kmedian
+
+        return resilient_kmedian(points, k, self.assignment, alive, session=self, **kw)
+
+    def pca(self, points, r: int, delta: float, alive, **kw):
+        from .pca import resilient_pca
+
+        return resilient_pca(points, r, delta, self.assignment, alive, session=self, **kw)
+
+    def coreset(self, points, k: int, m_per_node: int, alive, **kw):
+        from .coreset import resilient_coreset
+
+        return resilient_coreset(
+            points, k, m_per_node, self.assignment, alive, session=self, **kw
+        )
+
+    def cost(self, points, centers, alive, **kw):
+        from .kmeans import resilient_cost
+
+        return resilient_cost(points, centers, self.assignment, alive, session=self, **kw)
+
+    # --------------------------------------------------- scenario observation
+
+    def observe(self, step) -> dict:
+        """Feed one scenario step (or bare alive mask); returns an event dict.
+
+        Updates straggle streaks and coverage accounting, and — when the
+        elastic policy fires — patches the assignment.  The event reports
+        ``{"patched": bool, "at_risk": [...], "moved_nodes": [...],
+        "uncovered": int, "persistent": [...]}``.
+        """
+        alive = np.asarray(getattr(step, "alive", step), dtype=bool)
+        self.stats.rounds += 1
+        self._streak = np.where(alive, 0, self._streak + 1)
+        A = self.assignment.matrix
+        uncovered = int((A[alive].sum(axis=0) == 0).sum()) if alive.any() else self.num_shards
+        if uncovered:
+            self.stats.uncovered_rounds += 1
+        event = {
+            "patched": False,
+            "at_risk": [],
+            "moved_nodes": [],
+            "uncovered": uncovered,
+            "persistent": np.flatnonzero(self._streak >= self.elastic.patience).tolist(),
+        }
+        if not self.elastic.enabled or not event["persistent"]:
+            return event
+        persistent = self._streak >= self.elastic.patience
+        healthy = ~persistent
+        if not healthy.any():
+            return event  # nowhere to move data
+        cover_healthy = A[healthy].sum(axis=0)
+        cover_all = A.sum(axis=0)
+        # At risk: replicas lost to persistent stragglers pushed the healthy
+        # count to the floor.  Shards that were always thinly replicated but
+        # have no persistent holder are left alone.
+        at_risk = np.flatnonzero(
+            (cover_healthy <= self.elastic.coverage_floor) & (cover_all > cover_healthy)
+        )
+        if at_risk.size:
+            moved = self._patch(at_risk, healthy, alive)
+            if moved:  # a patch with no candidate target nodes is a no-op
+                event.update(patched=True, at_risk=at_risk.tolist(), moved_nodes=moved)
+        return event
+
+    # ----------------------------------------------------- elastic patching
+
+    def _patch(self, shards: np.ndarray, healthy: np.ndarray, alive: np.ndarray) -> list[int]:
+        """Re-replicate ``shards`` onto the least-loaded healthy nodes."""
+        mat = self.assignment.matrix.copy()
+        loads = mat.sum(axis=1).astype(np.int64)
+        moved: set[int] = set()
+        # Prefer nodes that are both healthy and alive THIS round; fall back
+        # to merely-healthy ones (transiently down but not persistent).
+        for j in shards:
+            for _ in range(self.elastic.extra_replicas):
+                for pool in (healthy & alive, healthy):
+                    cand = np.flatnonzero(pool & (mat[:, j] == 0))
+                    if cand.size:
+                        pick = int(cand[np.argmin(loads[cand])])
+                        mat[pick, j] = 1
+                        loads[pick] += 1
+                        moved.add(pick)
+                        break
+        if not moved:
+            return []
+        old_m = int(self.assignment.matrix.sum(axis=1).max())
+        scheme = self.assignment.scheme
+        if not scheme.endswith("+elastic"):
+            scheme = scheme + "+elastic"
+        self.assignment = dataclasses.replace(
+            self.assignment, matrix=mat, scheme=scheme
+        )
+        self._assignment_lineage.add(id(self.assignment))
+        self._invalidate_patterns(sorted(moved))
+        self.stats.elastic_patches += 1
+        self.version += 1
+        self._replace_moved_blocks(sorted(moved), old_m)
+        return sorted(moved)
+
+    def _invalidate_patterns(self, moved_nodes: list[int]) -> None:
+        """Drop ONLY the cache entries the patch can change.
+
+        A cached ``RecoveryResult`` for pattern ``R`` stays exactly valid iff
+        every patched node is dead in ``R`` — its weight is 0 there, so the
+        new matrix entries never enter ``bᵀA_R``.  Entries with any patched
+        node alive are dropped; everything else survives the patch.
+        """
+        moved = np.asarray(moved_nodes, dtype=np.int64)
+        for key in list(self._cache):
+            mask = np.frombuffer(key, dtype=bool)
+            if mask[moved].any():
+                del self._cache[key]
+                self.stats.cache_invalidations += 1
+
+    def _replace_moved_blocks(self, moved_nodes: list[int], old_m: int) -> None:
+        """Incrementally refresh the device-resident packed shards: only the
+        node rows the patch touched are re-packed and re-placed (the mesh
+        executor moves just those devices' blocks).  A patch that grows the
+        maximum load needs wider padding → full repack on next use."""
+        if self._resident is None or self._pack_src is None:
+            return
+        new_m = int(self.assignment.matrix.sum(axis=1).max())
+        if (
+            new_m > old_m  # wider padding needed: repack lazily
+            or self._resident_version != self.version - 1
+            or self._resident_src is not self._pack_src  # pack moved datasets
+        ):
+            self._resident = None
+            return
+        pts32 = self._packed_pts
+        d = pts32.shape[1]
+        xs_rows = np.zeros((len(moved_nodes), old_m, d), dtype=np.float32)
+        ws_rows = np.zeros((len(moved_nodes), old_m), dtype=np.float32)
+        for r, i in enumerate(moved_nodes):
+            shard_ids = self.assignment.shards_of(i)
+            xs_rows[r, : len(shard_ids)] = pts32[shard_ids]
+            ws_rows[r, : len(shard_ids)] = 1.0
+        ex = self.executor
+        xs_p, ws_p, _ = self._resident
+        self._resident = (
+            ex.update_node_rows(xs_p, moved_nodes, xs_rows),
+            ex.update_node_rows(ws_p, moved_nodes, ws_rows),
+            ex.place_broadcast(self.assignment.matrix.astype(np.float32)),
+        )
+        self._resident_version = self.version
+        # Host pack cache: patch the same rows so prepare() stays coherent.
+        # Copy-on-patch — arrays already handed out by prepare() must not
+        # change under a caller mid-algorithm.
+        if self._packed is not None and self._pack_version == self.version - 1:
+            xs, ws = self._packed[0].copy(), self._packed[1].copy()
+            xs[moved_nodes] = xs_rows
+            ws[moved_nodes] = ws_rows
+            self._packed = (xs, ws)
+            self._pack_version = self.version
+        self.stats.moved_node_blocks += len(moved_nodes)

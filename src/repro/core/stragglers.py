@@ -6,12 +6,24 @@ correlated slowdowns and adversarial worst cases, and at the training-loop
 level straggling is *deadline-based* (a node that misses the step deadline is
 treated as failed for that step).  All are modelled here; every model yields
 a boolean alive-mask consumed by :mod:`repro.core.recovery`.
+
+Two API layers:
+
+* **One-shot samplers** (:func:`random_stragglers`,
+  :func:`fixed_count_stragglers`, :func:`adversarial_stragglers`) — a single
+  alive mask, the paper's per-experiment view.
+* **Scenarios** (:class:`StragglerScenario` and subclasses) — an *iterator of
+  per-step* :class:`ScenarioStep` records, the multi-round view consumed
+  uniformly by :class:`repro.core.resilience.ResilienceSession`, the trainer,
+  and ``benchmarks/bench_scenarios.py``.  Every scenario is deterministic
+  given its seed and supports :meth:`~StragglerScenario.reset` (same seed →
+  same mask stream; reset → replay).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 
@@ -22,6 +34,13 @@ __all__ = [
     "fixed_count_stragglers",
     "adversarial_stragglers",
     "DeadlineStragglerSimulator",
+    "ScenarioStep",
+    "StragglerScenario",
+    "IIDScenario",
+    "FixedCountScenario",
+    "AdversarialScenario",
+    "DeadlineScenario",
+    "make_scenario",
 ]
 
 
@@ -48,23 +67,45 @@ def adversarial_stragglers(assignment: Assignment, t: int) -> np.ndarray:
     """Greedy worst case: kill the ``t`` nodes that maximize lost coverage.
 
     Iteratively removes the node whose removal minimizes the resulting minimum
-    shard-replication (ties broken towards larger load).  Used to stress-test
-    constructions: fractional-repetition/cyclic with ``ell ≥ t+1`` must
-    survive this; Bernoulli only survives w.h.p. for random stragglers.
+    shard-replication (ties broken towards more shards at the minimum, then
+    towards larger load, then towards the smallest node index).  Used to
+    stress-test constructions: fractional-repetition/cyclic with ``ell ≥ t+1``
+    must survive this; Bernoulli only survives w.h.p. for random stragglers.
+
+    The candidate scoring is vectorized: one ``(alive, n)`` coverage matrix
+    per removal round instead of a Python loop over candidates — O(t·s·n)
+    numpy work with no inner interpreter loop.
     """
     A = assignment.matrix.astype(np.int64)
     alive = np.ones(assignment.num_nodes, dtype=bool)
     for _ in range(min(t, assignment.num_nodes - 1)):
-        best_node, best_key = None, None
-        cover = A[alive].sum(axis=0)  # (n,)
-        for i in np.flatnonzero(alive):
-            # Coverage after killing node i.
-            c = cover - A[i]
-            key = (int(c.min()), -int((c == c.min()).sum()), -int(A[i].sum()))
-            if best_key is None or key < best_key:
-                best_key, best_node = key, i
-        alive[best_node] = False
+        cand = np.flatnonzero(alive)
+        # Row c: shard coverage after killing candidate cand[c].
+        C = A[alive].sum(axis=0)[None, :] - A[cand]  # (|cand|, n)
+        cmin = C.min(axis=1)
+        n_at_min = (C == cmin[:, None]).sum(axis=1)
+        load = A[cand].sum(axis=1)
+        # Lexicographic argmin of (cmin, -n_at_min, -load); np.lexsort is
+        # stable, so full ties resolve to the smallest node index — the same
+        # choice the scalar greedy loop made.
+        order = np.lexsort((-load, -n_at_min, cmin))
+        alive[cand[order[0]]] = False
     return alive
+
+
+class ScenarioStep(NamedTuple):
+    """One step of a straggler scenario — everything the step observed.
+
+    ``latencies`` and ``spiked`` are populated by the deadline simulator
+    (correlated-spike state included so a step record fully determines the
+    simulator's externally-visible state); mask-only scenarios leave them as
+    empty arrays.
+    """
+
+    alive: np.ndarray      # (s,) bool, True = alive
+    latencies: np.ndarray  # (s,) float step latencies (empty if not modelled)
+    spiked: np.ndarray     # (s,) bool correlated-slowdown state (empty if n/a)
+    index: int             # 0-based step number since construction/reset
 
 
 @dataclasses.dataclass
@@ -77,6 +118,9 @@ class DeadlineStragglerSimulator:
     iff its latency exceeds ``deadline``.  Slowdowns persist with probability
     ``persistence`` (correlated stragglers across steps — the hard case for
     non-redundant schemes).
+
+    Deterministic: the stream of step records is a pure function of the seed,
+    and :meth:`reset` replays it from the start.
     """
 
     num_nodes: int
@@ -88,15 +132,181 @@ class DeadlineStragglerSimulator:
     seed: int = 0
 
     def __post_init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind to step 0: same seed → the exact same step-record stream."""
         self._rng = np.random.default_rng(self.seed)
         self._spiked = np.zeros(self.num_nodes, dtype=bool)
+        self._index = 0
 
-    def step(self) -> tuple[np.ndarray, np.ndarray]:
-        """Returns (alive_mask, latencies) for one training step."""
+    def step(self) -> ScenarioStep:
+        """Advance one training step; the record carries the spike state."""
         rng = self._rng
         fresh = rng.random(self.num_nodes) < self.p_spike
         stay = self._spiked & (rng.random(self.num_nodes) < self.persistence)
         self._spiked = fresh | stay
         lat = rng.lognormal(mean=0.0, sigma=self.sigma, size=self.num_nodes)
         lat = np.where(self._spiked, lat * self.spike_scale, lat)
-        return lat <= self.deadline, lat
+        rec = ScenarioStep(
+            alive=lat <= self.deadline,
+            latencies=lat,
+            spiked=self._spiked.copy(),
+            index=self._index,
+        )
+        self._index += 1
+        return rec
+
+
+# --------------------------------------------------------------- scenarios
+
+
+class StragglerScenario:
+    """Iterator protocol over per-step alive masks.
+
+    Subclasses implement :meth:`_next` (one :class:`ScenarioStep`) and
+    :meth:`reset`.  Scenarios are infinite iterators — consumers decide the
+    round count — and deterministic given their construction arguments.
+    """
+
+    name = "abstract"
+
+    def __init__(self, num_nodes: int):
+        self.num_nodes = int(num_nodes)
+        self._index = 0
+
+    def reset(self) -> None:
+        self._index = 0
+
+    def __iter__(self) -> Iterator[ScenarioStep]:
+        return self
+
+    def __next__(self) -> ScenarioStep:
+        step = self._next()
+        self._index += 1
+        return step
+
+    def _next(self) -> ScenarioStep:
+        raise NotImplementedError
+
+    def _mask_step(self, alive: np.ndarray) -> ScenarioStep:
+        empty = np.zeros((0,), dtype=np.float64)
+        return ScenarioStep(
+            alive=np.asarray(alive, dtype=bool),
+            latencies=empty,
+            spiked=np.zeros((0,), dtype=bool),
+            index=self._index,
+        )
+
+
+class IIDScenario(StragglerScenario):
+    """Paper §3.4: every node straggles iid Bern(p) each step."""
+
+    name = "iid"
+
+    def __init__(self, num_nodes: int, p_straggler: float = 0.1, seed: int = 0):
+        super().__init__(num_nodes)
+        self.p_straggler = float(p_straggler)
+        self.seed = int(seed)
+        self.reset()
+
+    def reset(self) -> None:
+        super().reset()
+        self._rng = np.random.default_rng(self.seed)
+
+    def _next(self) -> ScenarioStep:
+        return self._mask_step(random_stragglers(self.num_nodes, self.p_straggler, self._rng))
+
+
+class FixedCountScenario(StragglerScenario):
+    """Exactly ``t`` uniformly-random stragglers per step (paper experiments)."""
+
+    name = "fixed"
+
+    def __init__(self, num_nodes: int, t: int = 1, seed: int = 0):
+        super().__init__(num_nodes)
+        self.t = int(t)
+        self.seed = int(seed)
+        self.reset()
+
+    def reset(self) -> None:
+        super().reset()
+        self._rng = np.random.default_rng(self.seed)
+
+    def _next(self) -> ScenarioStep:
+        return self._mask_step(fixed_count_stragglers(self.num_nodes, self.t, self._rng))
+
+
+class AdversarialScenario(StragglerScenario):
+    """Greedy worst-case pattern, re-targeted against the CURRENT assignment.
+
+    Holds a reference to the assignment so an elastic session that patches the
+    assignment mid-run faces a re-aimed adversary on the next step (call
+    :meth:`rebind` after a patch).  The mask is recomputed per step — the
+    adversary is stateless, so the stream is constant between rebinds.
+    """
+
+    name = "adversarial"
+
+    def __init__(self, assignment: Assignment, t: int = 1):
+        super().__init__(assignment.num_nodes)
+        self.t = int(t)
+        self.rebind(assignment)
+
+    def rebind(self, assignment: Assignment) -> None:
+        self.assignment = assignment
+        # The greedy is deterministic, so the mask is constant until the next
+        # rebind — compute it once here, not per step.
+        self._mask = adversarial_stragglers(assignment, self.t)
+
+    def _next(self) -> ScenarioStep:
+        return self._mask_step(self._mask.copy())  # records own their masks
+
+
+class DeadlineScenario(StragglerScenario):
+    """Deadline/correlated model: wraps :class:`DeadlineStragglerSimulator`."""
+
+    name = "deadline"
+
+    def __init__(self, num_nodes: int, **sim_kwargs):
+        super().__init__(num_nodes)
+        self.sim = DeadlineStragglerSimulator(num_nodes=num_nodes, **sim_kwargs)
+
+    def reset(self) -> None:
+        super().reset()
+        self.sim.reset()
+
+    def _next(self) -> ScenarioStep:
+        rec = self.sim.step()
+        return ScenarioStep(
+            alive=rec.alive, latencies=rec.latencies, spiked=rec.spiked,
+            index=self._index,
+        )
+
+
+def make_scenario(
+    name: str,
+    num_nodes: int,
+    *,
+    assignment: Optional[Assignment] = None,
+    **kwargs,
+) -> StragglerScenario:
+    """Factory over the four models: iid / fixed / adversarial / deadline.
+
+    ``assignment`` is required (and only used) by the adversarial scenario.
+    Remaining kwargs go to the scenario constructor (``p_straggler``, ``t``,
+    ``seed``, or the deadline-simulator knobs).
+    """
+    if name == "iid":
+        return IIDScenario(num_nodes, **kwargs)
+    if name == "fixed":
+        return FixedCountScenario(num_nodes, **kwargs)
+    if name == "adversarial":
+        if assignment is None:
+            raise ValueError("adversarial scenario needs assignment=")
+        return AdversarialScenario(assignment, **kwargs)
+    if name == "deadline":
+        return DeadlineScenario(num_nodes, **kwargs)
+    raise ValueError(
+        f"unknown scenario {name!r}; expected iid/fixed/adversarial/deadline"
+    )

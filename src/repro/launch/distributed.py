@@ -44,6 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.aggregation import resilient_psum, resilient_sum
 from ..core.executor import Executor
+from ..core.recovery import jax_recovery_masked
 from .compat import make_auto_mesh, shard_map
 
 __all__ = ["MeshExecutor", "node_mesh"]
@@ -147,4 +148,93 @@ class MeshExecutor(Executor):
         broadcast_args = tuple(self._place(a, P()) for a in broadcast_args)
         return self._compiled(fn, len(node_args) - 1, len(broadcast_args), reduce_=True)(
             *node_args, *broadcast_args
+        )
+
+    def _compiled_masked(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
+        """Fused mask → on-device recovery solve → Lemma-3 psum.
+
+        ``A`` and ``alive`` enter replicated (``P()``); every device runs the
+        (small, O(s·n)) projected-gradient solve redundantly and slices its
+        own node block of ``b_full`` by ``axis_index`` — cheaper than a
+        gather, and the straggler pattern stays runtime data.
+        """
+        key = ("masked", fn, n_node, n_bcast, iters)
+        if key in self._jitted:
+            return self._jitted[key]
+        in_axes = (0,) * n_node + (None,) * n_bcast
+        inner = jax.vmap(fn, in_axes=in_axes)
+
+        def step(A, alive, *args):
+            b_full = jax_recovery_masked(A, alive, iters=iters)
+            per_node = inner(*args)
+            blk = args[0].shape[0]  # this device's node-block size (static)
+            i = jax.lax.axis_index(NODE_AXIS)
+            b_blk = jax.lax.dynamic_slice(b_full, (i * blk,), (blk,))
+            local = resilient_sum(per_node, b_blk)
+            return resilient_psum(local, jnp.float32(1.0), NODE_AXIS), b_full
+
+        in_specs = (P(), P()) + (P(NODE_AXIS),) * n_node + (P(),) * n_bcast
+        out_specs = (P(), P())
+        sharded = shard_map(
+            step, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        self._jitted[key] = jax.jit(sharded)
+        return self._jitted[key]
+
+    def resilient_reduce_masked(
+        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300
+    ):
+        node_args, _ = self._pad_nodes(tuple(node_args))
+        s_pad = int(jnp.shape(node_args[0])[0])
+        A = jnp.asarray(A, jnp.float32)
+        alive = jnp.asarray(alive, bool)
+        pad = s_pad - A.shape[0]
+        if pad:  # padded node rows: no shards, never alive → b pinned to 0
+            A = jnp.pad(A, ((0, pad), (0, 0)))
+            alive = jnp.pad(alive, (0, pad))
+        node_args = tuple(self._place(a, P(NODE_AXIS)) for a in node_args)
+        broadcast_args = tuple(self._place(a, P()) for a in broadcast_args)
+        return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
+            self._place(A, P()), self._place(alive, P()),
+            *node_args, *broadcast_args,
+        )
+
+    # --------------------------------------------------- placement helpers
+
+    def place_node_stacked(self, arr):
+        """Pad to the device-count multiple and shard over the node axis."""
+        (arr,), _ = self._pad_nodes((arr,))
+        return self._place(arr, P(NODE_AXIS))
+
+    def place_broadcast(self, arr):
+        return self._place(arr, P())
+
+    def update_node_rows(self, arr, rows, new_rows):
+        """Re-place ONLY the device blocks that own ``rows``.
+
+        Per-device surgery: pull back just the affected devices' node blocks,
+        patch the changed rows, `device_put` those blocks to their device, and
+        reassemble the global array from the (mostly untouched) single-device
+        shards — the unchanged blocks never cross the host↔device boundary.
+        """
+        rows = [int(r) for r in rows]
+        new_rows = np.asarray(new_rows)
+        if not isinstance(arr, jax.Array) or arr.sharding != NamedSharding(
+            self.mesh, P(NODE_AXIS)
+        ):
+            arr = self.place_node_stacked(arr)
+        blk = arr.shape[0] // self.num_devices
+        by_dev: dict[int, list[int]] = {}
+        for j, r in enumerate(rows):
+            by_dev.setdefault(r // blk, []).append(j)
+        shard_data = {s.device: s.data for s in arr.addressable_shards}
+        for dev_idx, updates in by_dev.items():
+            dev = self.devices[dev_idx]
+            block = np.array(shard_data[dev])  # copy: shard views are read-only
+            for j in updates:
+                block[rows[j] - dev_idx * blk] = new_rows[j]
+            shard_data[dev] = jax.device_put(block, dev)
+        return jax.make_array_from_single_device_arrays(
+            arr.shape, arr.sharding, [shard_data[d] for d in self.devices]
         )

@@ -83,12 +83,14 @@ class ElasticGroupManager:
         # Loads are no longer perfectly balanced after takeover; that is the
         # price of elasticity until the next full re-shard. Rebuild the plan
         # object bypassing the balance check.
+        from ..core.resilience import ResilienceSession
+
         new_plan = object.__new__(RedundantShardPlan)
         new_plan.assignment = dataclasses.replace(
             fresh.assignment, matrix=mat, scheme="elastic_cyclic"
         )
         new_plan.num_groups = self.plan.num_groups
         new_plan.shards_per_group = self.plan.shards_per_group
-        new_plan._cache = {}
+        new_plan.session = ResilienceSession(new_plan.assignment)
         self.plan = new_plan
         self.reshard_count += 1

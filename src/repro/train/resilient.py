@@ -34,21 +34,30 @@ from ..core.assignment import (
     fractional_repetition_assignment,
     singleton_assignment,
 )
-from ..core.recovery import RecoveryResult, solve_recovery
+from ..core.recovery import RecoveryResult
+from ..core.resilience import ResilienceSession
 
 __all__ = ["RedundantShardPlan", "make_plan"]
 
 
 @dataclasses.dataclass
 class RedundantShardPlan:
-    """Shard→group assignment with cached per-pattern recovery weights."""
+    """Shard→group assignment with cached per-pattern recovery weights.
+
+    The per-pattern cache and the solver live in a
+    :class:`repro.core.resilience.ResilienceSession` (``plan.session``) —
+    the SAME cache the clustering entry points use, so a trainer and an
+    evaluation pass over one assignment never solve a pattern twice.
+    """
 
     assignment: Assignment
     num_groups: int
     shards_per_group: int  # uniform load ℓ·n/G (balanced constructions only)
+    session: ResilienceSession = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
-        self._cache: dict[bytes, RecoveryResult] = {}
+        if self.session is None:
+            self.session = ResilienceSession(self.assignment)
         loads = self.assignment.matrix.sum(axis=1)
         if not (loads == loads[0]).all():
             raise ValueError(
@@ -65,16 +74,11 @@ class RedundantShardPlan:
         return self.assignment.shards_of(g)
 
     def recovery(self, alive: np.ndarray) -> RecoveryResult:
-        alive = np.asarray(alive, dtype=bool)
-        key = alive.tobytes()
-        if key not in self._cache:
-            self._cache[key] = solve_recovery(self.assignment, alive)
-        return self._cache[key]
+        return self.session.recovery(alive)
 
     def group_weights(self, alive: np.ndarray) -> tuple[np.ndarray, RecoveryResult]:
         """(G,) float32 weights (b, zeros at stragglers) + diagnostics."""
-        res = self.recovery(alive)
-        return res.b_full.astype(np.float32), res
+        return self.session.recovery_weights(alive)
 
     def degraded_weights(self, alive: np.ndarray) -> np.ndarray:
         """Fallback when Property 1 fails (too many dead groups): use the

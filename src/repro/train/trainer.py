@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.stragglers import DeadlineStragglerSimulator
+from ..core.stragglers import StragglerScenario, make_scenario
 from ..data.pipeline import RedundantDataPipeline
 from ..models import transformer as T
 from ..models.registry import ModelConfig
@@ -40,6 +40,7 @@ class TrainerConfig:
     ckpt_keep: int = 3
     seed: int = 0
     simulate_stragglers: bool = True
+    straggler_scenario: str = "deadline"  # any repro.core.stragglers scenario
     straggler_deadline: float = 2.0
     compression: Optional[CompressionConfig] = None
 
@@ -65,9 +66,16 @@ class Trainer:
             plan, vocab=cfg.vocab, microbatch=tcfg.microbatch,
             seq_len=tcfg.seq_len, seed=tcfg.seed,
         )
-        self.straggler_sim = DeadlineStragglerSimulator(
-            num_nodes=tcfg.num_groups, deadline=tcfg.straggler_deadline,
-            seed=tcfg.seed + 1,
+        # Straggling arrives through the scenario iterator protocol — the
+        # same stream type the ResilienceSession and bench_scenarios consume.
+        scen_kw = {}
+        if tcfg.straggler_scenario in ("iid", "fixed", "deadline"):
+            scen_kw["seed"] = tcfg.seed + 1
+        if tcfg.straggler_scenario == "deadline":
+            scen_kw["deadline"] = tcfg.straggler_deadline
+        self.scenario: StragglerScenario = make_scenario(
+            tcfg.straggler_scenario, tcfg.num_groups,
+            assignment=plan.assignment, **scen_kw,
         )
         self._step_fn = jax.jit(
             make_train_step(cfg, self.ctx, self.opt_cfg, compression=tcfg.compression)
@@ -102,10 +110,11 @@ class Trainer:
         start_step = start_step or 0
         for step in range(start_step, self.tcfg.steps):
             if self.tcfg.simulate_stragglers:
-                alive_t, latencies = self.straggler_sim.step()
+                srec = next(self.scenario)
+                alive_t, latencies = srec.alive, srec.latencies
             else:
                 alive_t = np.ones(self.tcfg.num_groups, dtype=bool)
-                latencies = np.zeros(self.tcfg.num_groups)
+                latencies = np.zeros((0,))  # scenario-less: not modelled
             weights, rec = self.elastic.step_weights(~alive_t)
             if not weights.any():  # every group straggled: skip the step
                 self.history.append({"step": step, "skipped": True})
@@ -124,6 +133,10 @@ class Trainer:
                 "delta": float(rec.delta) if np.isfinite(rec.delta) else -1.0,
                 "covered": float(rec.covered_fraction),
             }
+            if latencies.size == self.tcfg.num_groups:
+                # Only the deadline scenario models latency; mask-only
+                # scenarios return an empty array.
+                record["mean_latency"] = float(latencies.mean())
             self.history.append(record)
             if on_step:
                 on_step(step, record)

@@ -1,0 +1,674 @@
+"""Elastic resilience runtime tests: ResilienceSession state sharing,
+on-device recovery (fused compiled step), elastic re-assignment, the
+straggler scenario protocol, and the PR's satellite fixes.
+
+Multi-round MESH tests follow the repo's forced-host-device pattern
+(subprocess with XLA_FLAGS, like tests/test_distributed_executor.py) so the
+in-process suite keeps its single-device assumptions and tier-1 stays fast.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pts(n=160, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+# ------------------------------------------------------ satellite: adversary
+
+
+def _adversarial_reference(assignment, t):
+    """The pre-vectorization scalar greedy (kept verbatim as the oracle)."""
+    A = assignment.matrix.astype(np.int64)
+    alive = np.ones(assignment.num_nodes, dtype=bool)
+    for _ in range(min(t, assignment.num_nodes - 1)):
+        best_node, best_key = None, None
+        cover = A[alive].sum(axis=0)
+        for i in np.flatnonzero(alive):
+            c = cover - A[i]
+            key = (int(c.min()), -int((c == c.min()).sum()), -int(A[i].sum()))
+            if best_key is None or key < best_key:
+                best_key, best_node = key, i
+        alive[best_node] = False
+    return alive
+
+
+def test_adversarial_vectorized_matches_reference():
+    from repro.core import (
+        adversarial_stragglers,
+        bernoulli_assignment,
+        cyclic_assignment,
+        fractional_repetition_assignment,
+        singleton_assignment,
+    )
+
+    cases = [
+        cyclic_assignment(37, 9, 3),
+        fractional_repetition_assignment(24, 8, 2),
+        singleton_assignment(20, 6),
+    ]
+    for seed in range(4):
+        cases.append(
+            bernoulli_assignment(30, 7, ell=2.5, rng=np.random.default_rng(seed))
+        )
+    for a in cases:
+        for t in (0, 1, 2, 3):
+            got = adversarial_stragglers(a, t)
+            want = _adversarial_reference(a, t)
+            np.testing.assert_array_equal(got, want, err_msg=f"{a.scheme} t={t}")
+
+
+# ------------------------------------------------- satellite: nnls degeneracy
+
+
+def _degenerate_nnls_assignment():
+    """NNLS pins b_0 to exactly 0 here: serving shard 0 (unique to node 0)
+    costs more over-coverage on the 4 triple-replicated shards than it saves
+    (KKT multiplier at the boundary), so covered shard 0 ends with zero mass."""
+    from repro.core.assignment import Assignment
+
+    mat = np.zeros((3, 13), dtype=np.uint8)
+    mat[0, 0] = 1      # shard 0: node 0 only
+    mat[:, 1:5] = 1    # shards 1-4: everyone
+    mat[1, 5:9] = 1    # shards 5-8: node 1 only
+    mat[2, 9:13] = 1   # shards 9-12: node 2 only
+    return Assignment(matrix=mat, scheme="crafted", params={})
+
+
+def test_nnls_degenerate_is_explicitly_infeasible():
+    from repro.core.recovery import nnls_recovery
+
+    a = _degenerate_nnls_assignment()
+    res = nnls_recovery(a, np.ones(3, dtype=bool))
+    assert res.method == "nnls"
+    assert res.feasible is False
+    assert res.a[0] <= 1e-12  # the raw, unscaled b came back
+
+
+def test_solve_recovery_auto_skips_degenerate_nnls_to_lp():
+    from repro.core.recovery import solve_recovery
+
+    a = _degenerate_nnls_assignment()
+    res = solve_recovery(a, np.ones(3, dtype=bool), method="auto")
+    assert res.method == "lp"
+    assert res.feasible
+    assert res.a.min() >= 1.0 - 1e-7
+
+
+# ------------------------------------- satellite: simulator reset/determinism
+
+
+def test_deadline_simulator_determinism_and_reset():
+    from repro.core import DeadlineStragglerSimulator
+
+    kw = dict(num_nodes=7, seed=11, p_spike=0.3, persistence=0.7)
+    s1 = DeadlineStragglerSimulator(**kw)
+    s2 = DeadlineStragglerSimulator(**kw)
+    run1 = [s1.step() for _ in range(8)]
+    run2 = [s2.step() for _ in range(8)]
+    for r1, r2 in zip(run1, run2):  # same seed → same stream
+        np.testing.assert_array_equal(r1.alive, r2.alive)
+        np.testing.assert_array_equal(r1.spiked, r2.spiked)
+        np.testing.assert_allclose(r1.latencies, r2.latencies)
+    s1.reset()
+    replay = [s1.step() for _ in range(8)]
+    for r1, r2 in zip(run1, replay):  # reset → replay
+        np.testing.assert_array_equal(r1.alive, r2.alive)
+        np.testing.assert_array_equal(r1.spiked, r2.spiked)
+        assert r1.index == r2.index
+
+
+def test_step_record_carries_spike_state():
+    from repro.core import DeadlineStragglerSimulator
+
+    kw = dict(num_nodes=5, seed=0, p_spike=0.5, persistence=1.0)
+    sim = DeadlineStragglerSimulator(**kw)
+    recs = [sim.step() for _ in range(6)]
+    assert any(r.spiked.any() for r in recs)
+    # The record owns a SNAPSHOT: mutating it must not corrupt the stream.
+    recs[2].spiked[:] = ~recs[2].spiked
+    tail = [sim.step() for _ in range(3)]
+    ref = DeadlineStragglerSimulator(**kw)
+    for _ in range(6):
+        ref.step()
+    for got, want in zip(tail, [ref.step() for _ in range(3)]):
+        np.testing.assert_array_equal(got.spiked, want.spiked)
+        np.testing.assert_array_equal(got.alive, want.alive)
+
+
+# ------------------------------------------------------- scenario protocol
+
+
+def test_scenario_factory_and_reset_replay():
+    from repro.core import cyclic_assignment, make_scenario
+
+    a = cyclic_assignment(24, 6, 2)
+    for name, kw in (
+        ("iid", {"p_straggler": 0.3, "seed": 2}),
+        ("fixed", {"t": 2, "seed": 2}),
+        ("deadline", {"seed": 2, "p_spike": 0.3}),
+    ):
+        scen = make_scenario(name, 6, **kw)
+        first = [next(scen) for _ in range(5)]
+        scen.reset()
+        again = [next(scen) for _ in range(5)]
+        for r1, r2 in zip(first, again):
+            np.testing.assert_array_equal(r1.alive, r2.alive)
+            assert r1.index == r2.index
+        assert first[0].alive.shape == (6,)
+
+    adv = make_scenario("adversarial", 6, assignment=a, t=1)
+    s1, s2 = next(adv), next(adv)
+    np.testing.assert_array_equal(s1.alive, s2.alive)  # stateless adversary
+    with pytest.raises(ValueError, match="assignment"):
+        make_scenario("adversarial", 6)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("lunch-break", 6)
+
+
+# --------------------------------------------------- session: shared cache
+
+
+def test_session_one_cache_across_algorithms_and_plan():
+    from repro.core import ResilienceSession, cyclic_assignment, fixed_count_stragglers
+
+    pts = _pts(120)
+    a = cyclic_assignment(120, 6, 2)
+    alive = fixed_count_stragglers(6, 1, np.random.default_rng(3))
+    sess = ResilienceSession(a)
+    out = sess.kmedian(pts, 3, alive, local_iters=3, coord_iters=4)
+    sess.cost(pts, out.centers, alive)
+    sess.pca(pts, 2, 0.5, alive)
+    sess.coreset(pts, 3, 16, alive)
+    assert sess.stats.host_solves == 1  # one pattern, solved once, shared 4×
+    assert sess.stats.cache_hits == 3
+
+
+def test_entry_points_without_session_unchanged():
+    """session=None must reproduce the old per-call behaviour exactly."""
+    from repro.core import (
+        cyclic_assignment,
+        fixed_count_stragglers,
+        resilient_kmedian,
+    )
+
+    pts = _pts(100, seed=5)
+    a = cyclic_assignment(100, 5, 2)
+    alive = fixed_count_stragglers(5, 1, np.random.default_rng(1))
+    o1 = resilient_kmedian(pts, 3, a, alive, local_iters=3, coord_iters=4)
+    o2 = resilient_kmedian(pts, 3, a, alive, local_iters=3, coord_iters=4)
+    assert o1.cost == pytest.approx(o2.cost)
+
+
+def test_training_plan_rides_the_session_cache():
+    from repro.train.resilient import make_plan
+
+    plan = make_plan(6, 6, redundancy=2, scheme="cyclic")
+    alive = np.array([True, True, False, True, True, True])
+    plan.group_weights(alive)
+    plan.group_weights(alive)
+    plan.recovery(alive)
+    assert plan.session.stats.host_solves == 1
+    assert plan.session.stats.cache_hits == 2
+
+
+# ---------------------------------------- on-device recovery (satellite 4)
+
+
+def test_jax_recovery_masked_parity_with_lp():
+    """Device-solver weights must land in the LP's feasibility band (within
+    tolerance) on all three construction families."""
+    from repro.core import (
+        bernoulli_assignment,
+        cyclic_assignment,
+        fixed_count_stragglers,
+        fractional_repetition_assignment,
+        jax_recovery_masked,
+        lp_recovery,
+    )
+
+    rng = np.random.default_rng(0)
+    cases = [
+        cyclic_assignment(60, 8, 3),
+        fractional_repetition_assignment(64, 8, 2),
+        bernoulli_assignment(60, 10, ell=4.0, rng=rng),
+    ]
+    for a in cases:
+        alive = fixed_count_stragglers(a.num_nodes, 2, rng)
+        lp = lp_recovery(a, alive)
+        b = np.asarray(
+            jax_recovery_masked(a.matrix.astype(np.float32), alive, iters=500)
+        )
+        assert (b[~alive] == 0).all(), "stragglers must get zero weight"
+        ach = b @ a.matrix
+        covered = a.matrix[alive].sum(axis=0) > 0
+        if lp.feasible:
+            assert ach[covered].min() >= 1.0 - 1e-3, a.scheme
+            # Heuristic band: within a constant factor of the LP optimum.
+            assert ach[covered].max() <= 4.0 * (1.0 + lp.delta), a.scheme
+
+
+def test_jax_recovery_masked_uncovered_shard_pattern():
+    from repro.core import jax_recovery_masked, lp_recovery, singleton_assignment
+
+    a = singleton_assignment(30, 6)
+    alive = np.array([True, True, False, True, True, True])
+    lp = lp_recovery(a, alive)
+    assert len(lp.uncovered) > 0
+    b = np.asarray(jax_recovery_masked(a.matrix.astype(np.float32), alive, iters=300))
+    ach = b @ a.matrix
+    covered = a.matrix[alive].sum(axis=0) > 0
+    assert np.isfinite(b).all()
+    assert (ach[~covered] == 0).all()  # lost shards stay lost, no NaN/Inf
+    assert ach[covered].min() >= 1.0 - 1e-3  # covered band still achieved
+    np.testing.assert_array_equal(np.flatnonzero(~covered), lp.uncovered)
+
+
+def test_step_cost_no_host_solve_no_recompile_lemma3_band():
+    """The fused path: unseen straggler patterns are runtime data — zero host
+    solves, zero re-lowers, and the estimate stays in the Lemma-3 band."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ResilienceSession,
+        clustering_cost,
+        cyclic_assignment,
+        fixed_count_stragglers,
+        lloyd,
+    )
+    from repro.core.executor import get_executor
+
+    pts = _pts(150, seed=7)
+    a = cyclic_assignment(150, 6, 2)  # δ = 0 band for any single straggler
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), 3, iters=4).centers
+    )
+    true = float(clustering_cost(jnp.asarray(pts), jnp.asarray(centers)))
+    sess = ResilienceSession(a)
+    ex = get_executor(None)
+    est0 = sess.step_cost(pts, centers, fixed_count_stragglers(6, 1, np.random.default_rng(0)))
+    n_compiled = len(ex._jitted)
+    for seed in (1, 2, 3):  # three more previously-unseen patterns
+        alive = fixed_count_stragglers(6, 1, np.random.default_rng(seed))
+        est = sess.step_cost(pts, centers, alive)
+        assert true * (1 - 1e-4) <= est <= true * 1.5
+    assert len(ex._jitted) == n_compiled, "new pattern must not re-lower"
+    assert sess.stats.host_solves == 0
+    assert sess.stats.device_solves == 4
+    assert true * (1 - 1e-4) <= est0 <= true * 1.5
+
+
+# ----------------------------------------------------- elastic re-assignment
+
+
+def _persistent_spike_scenario(s=8, seed=6):
+    from repro.core import make_scenario
+
+    # persistence=1.0: spiked nodes never recover — the elastic regime.
+    return make_scenario(
+        "deadline", s, seed=seed, p_spike=0.06, persistence=1.0,
+        spike_scale=6.0, deadline=2.0,
+    )
+
+
+def test_elastic_repairs_coverage_disabled_loses_it():
+    from repro.core import ElasticPolicy, ResilienceSession, cyclic_assignment
+
+    def run(enabled):
+        sess = ResilienceSession(
+            cyclic_assignment(160, 8, 2),
+            elastic=ElasticPolicy(enabled=enabled, patience=2),
+        )
+        scen = _persistent_spike_scenario()
+        uncovered = [sess.observe(next(scen))["uncovered"] for _ in range(16)]
+        return sess, uncovered
+
+    s_on, u_on = run(True)
+    s_off, u_off = run(False)
+    assert s_on.stats.elastic_patches >= 1
+    assert all(u == 0 for u in u_on[-6:]), f"elastic must restore coverage: {u_on}"
+    assert any(u > 0 for u in u_off[-6:]), f"disabled run must report loss: {u_off}"
+    assert s_off.stats.uncovered_rounds > s_on.stats.uncovered_rounds
+
+
+def test_elastic_patch_invalidates_only_affected_patterns():
+    from repro.core import ElasticPolicy, ResilienceSession, cyclic_assignment
+
+    sess = ResilienceSession(
+        cyclic_assignment(40, 8, 2), elastic=ElasticPolicy(enabled=True, patience=2)
+    )
+    # Prime the host cache: one pattern with every healthy node alive, one
+    # with ALL potential patch targets (nodes 0..5) dead.
+    dead_67 = np.ones(8, dtype=bool)
+    dead_67[[6, 7]] = False
+    only_67 = ~dead_67
+    sess.recovery(dead_67)
+    sess.recovery(only_67)
+    assert sess.stats.host_solves == 2
+    # Persistent stragglers 6, 7 → patch re-replicates their shards onto the
+    # healthy nodes 0..5.
+    for _ in range(3):
+        sess.observe(dead_67)
+    assert sess.stats.elastic_patches >= 1
+    # dead_67 has patched nodes alive → its cached result is stale → dropped;
+    # only_67 has every patched node dead (b=0 there, the new matrix entries
+    # never enter bᵀA_R) → it must SURVIVE the patch.
+    solves_before, hits_before = sess.stats.host_solves, sess.stats.cache_hits
+    sess.recovery(only_67)
+    assert sess.stats.cache_hits == hits_before + 1, "unaffected entry was dropped"
+    res = sess.recovery(dead_67)
+    assert sess.stats.host_solves == solves_before + 1, "stale entry was kept"
+    assert res.feasible and len(res.uncovered) == 0
+
+
+def test_elastic_patch_repairs_recovery_after_coverage_loss():
+    """After the patch, the pattern that used to lose shards becomes exactly
+    recoverable (the re-replicated shards have live replicas)."""
+    from repro.core import ElasticPolicy, ResilienceSession, cyclic_assignment
+
+    a = cyclic_assignment(40, 8, 2)
+    sess = ResilienceSession(a, elastic=ElasticPolicy(enabled=True, patience=2))
+    dead = np.ones(8, dtype=bool)
+    dead[[6, 7]] = False  # adjacent under cyclic ell=2 → coverage lost
+    assert len(sess.recovery(dead).uncovered) > 0
+    for _ in range(3):
+        sess.observe(dead)
+    assert sess.stats.elastic_patches >= 1
+    assert sess.assignment.scheme.endswith("+elastic")
+    res = sess.recovery(dead)
+    assert len(res.uncovered) == 0 and res.feasible
+
+
+def test_step_cost_tracks_dataset_switches():
+    """The resident device placement must follow the points argument even
+    when host-path calls (cost/prepare) repack a different dataset between
+    step_cost calls — regression for a stale-resident aliasing bug."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ResilienceSession, cyclic_assignment, lloyd
+
+    a = cyclic_assignment(80, 4, 2)
+    pts_a = _pts(80, seed=1)
+    pts_b = pts_a + 100.0  # wildly different cost against the same centers
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(0), jnp.asarray(pts_a), 2, iters=3).centers
+    )
+    alive = np.array([True, True, True, False])
+    sess = ResilienceSession(a)
+    est_a = sess.step_cost(pts_a, centers, alive)
+    sess.cost(pts_b, centers, alive)  # host path repacks for pts_b
+    est_b = sess.step_cost(pts_b, centers, alive)
+    fresh = ResilienceSession(a).step_cost(pts_b, centers, alive)
+    assert est_b == pytest.approx(fresh, rel=1e-6)
+    assert est_b > 10 * est_a  # and definitely not pts_a's cost
+
+
+def test_in_place_mutation_invalidates_pack_cache():
+    """Identity-keyed caching must not survive an in-place edit of the
+    caller's points array (content fingerprint regression)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ResilienceSession, cyclic_assignment, lloyd
+
+    a = cyclic_assignment(80, 4, 2)
+    pts = _pts(80, seed=2)
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), 2, iters=3).centers
+    )
+    alive = np.array([True, True, False, True])
+    sess = ResilienceSession(a)
+    est1 = sess.step_cost(pts, centers, alive)
+    c1 = sess.cost(pts, centers, alive)
+    pts *= 3.0  # in-place: same object, new contents
+    est2 = sess.step_cost(pts, centers, alive)
+    c2 = sess.cost(pts, centers, alive)
+    fresh = ResilienceSession(a)
+    assert est2 == pytest.approx(fresh.step_cost(pts, centers, alive), rel=1e-6)
+    assert c2 == pytest.approx(fresh.cost(pts, centers, alive), rel=1e-6)
+    assert est2 != pytest.approx(est1, rel=1e-3)
+    assert c2 != pytest.approx(c1, rel=1e-3)
+
+
+def test_session_rejects_foreign_assignment_and_executor():
+    from repro.core import (
+        ElasticPolicy,
+        ResilienceSession,
+        cyclic_assignment,
+        resilient_cost,
+        resilient_kmedian,
+    )
+
+    pts = _pts(40, seed=4)
+    a = cyclic_assignment(40, 8, 2)
+    other = cyclic_assignment(40, 8, 3)  # same node count, different matrix
+    sess = ResilienceSession(a, elastic=ElasticPolicy(enabled=True, patience=2))
+    alive = np.ones(8, dtype=bool)
+    with pytest.raises(ValueError, match="not the session's assignment"):
+        resilient_kmedian(pts, 2, other, alive, session=sess,
+                          local_iters=2, coord_iters=2)
+    with pytest.raises(ValueError, match="conflicts with the session's"):
+        resilient_cost(pts, np.zeros((2, 3), np.float32), a, alive,
+                       session=sess, executor="mesh")
+    # The ORIGINAL assignment stays accepted after an elastic patch (lineage).
+    dead = alive.copy()
+    dead[[6, 7]] = False
+    for _ in range(3):
+        sess.observe(dead)
+    assert sess.stats.elastic_patches >= 1
+    assert sess.assignment is not a
+    est = resilient_cost(pts, np.zeros((2, 3), np.float32), a, dead, session=sess)
+    assert np.isfinite(est)
+
+
+def test_step_cost_all_dead_raises():
+    from repro.core import ResilienceSession, cyclic_assignment
+
+    sess = ResilienceSession(cyclic_assignment(40, 4, 2))
+    with pytest.raises(ValueError, match="no surviving"):
+        sess.step_cost(_pts(40), np.zeros((2, 3), np.float32), np.zeros(4, bool))
+
+
+def test_recovery_method_conflict_with_session_raises():
+    from repro.core import ResilienceSession, cyclic_assignment, resilient_kmedian
+
+    a = cyclic_assignment(60, 6, 2)
+    sess = ResilienceSession(a, recovery_method="lp")
+    alive = np.array([True] * 5 + [False])
+    with pytest.raises(ValueError, match="conflicts with the session"):
+        resilient_kmedian(
+            _pts(60), 3, a, alive, recovery_method="uniform", session=sess
+        )
+    # Explicitly matching (or omitted) methods are fine.
+    out = sess.kmedian(_pts(60), 3, alive, local_iters=2, coord_iters=2,
+                       recovery_method="lp")
+    assert np.isfinite(out.cost)
+
+
+def _skewed_assignment():
+    """Max load 8 on nodes 0/1; nodes 6/7 exclusively hold shards 16–19.
+    Killing 6 and 7 puts those shards at risk, and the patch targets (the
+    least-loaded healthy nodes 4/5, load 4 → ≤ 8) fit inside the existing
+    padding — exercising the INCREMENTAL re-pack/re-place branch."""
+    from repro.core.assignment import Assignment
+
+    mat = np.zeros((8, 20), dtype=np.uint8)
+    mat[0, 0:8] = 1
+    mat[1, 8:16] = 1
+    mat[2, 0:8] = 1
+    mat[3, 8:16] = 1
+    mat[4, 0:4] = 1
+    mat[5, 4:8] = 1
+    mat[6, 16:20] = 1
+    mat[7, 16:20] = 1
+    return Assignment(matrix=mat, scheme="skewed", params={})
+
+
+def test_patch_does_not_mutate_handed_out_pack():
+    """Arrays returned by prepare() must stay stable across an elastic patch
+    (copy-on-patch), or a caller's in-flight algorithm would see mixed
+    pre-/post-patch placements."""
+    from repro.core import ElasticPolicy, ResilienceSession
+    from repro.core.kmedian import prepare_resilient_run
+
+    pts = _pts(20, seed=3)
+    sess = ResilienceSession(
+        _skewed_assignment(), elastic=ElasticPolicy(enabled=True, patience=2)
+    )
+    dead = np.ones(8, dtype=bool)
+    dead[[6, 7]] = False
+    # Make the pack + placement resident, then hand out the host arrays.
+    sess.step_cost(pts, np.zeros((2, 3), np.float32), dead)
+    _, _, _, _, xs, ws = prepare_resilient_run(pts, None, dead, session=sess)
+    xs_snap, ws_snap = xs.copy(), ws.copy()
+    for _ in range(3):
+        sess.observe(dead)
+    assert sess.stats.elastic_patches >= 1
+    assert sess.stats.moved_node_blocks >= 1, "incremental branch did not run"
+    np.testing.assert_array_equal(xs, xs_snap)
+    np.testing.assert_array_equal(ws, ws_snap)
+    # The session's own view DID move on: fresh arrays with the re-replicated
+    # shards now weighted on the patch-target nodes.
+    _, _, _, _, xs2, ws2 = prepare_resilient_run(pts, None, dead, session=sess)
+    assert xs2 is not xs
+    assert ws2[[4, 5]].sum() > ws[[4, 5]].sum()
+
+
+def test_executor_update_node_rows_local():
+    from repro.core.executor import get_executor
+
+    ex = get_executor(None)
+    arr = ex.place_node_stacked(np.arange(12, dtype=np.float32).reshape(6, 2))
+    out = np.asarray(ex.update_node_rows(arr, [0, 3], np.full((2, 2), 9.0, np.float32)))
+    want = np.arange(12, dtype=np.float32).reshape(6, 2)
+    want[[0, 3]] = 9.0
+    np.testing.assert_array_equal(out, want)
+
+
+def test_executor_update_node_rows_mesh_single_device():
+    from repro.core.executor import get_executor
+
+    ex = get_executor("mesh")
+    arr = ex.place_node_stacked(np.arange(12, dtype=np.float32).reshape(6, 2))
+    out = np.asarray(ex.update_node_rows(arr, [1, 4], np.full((2, 2), 7.0, np.float32)))
+    want = np.arange(12, dtype=np.float32).reshape(6, 2)
+    want[[1, 4]] = 7.0
+    np.testing.assert_array_equal(out, want)
+
+
+def test_session_mesh_matches_local_single_device():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ResilienceSession, cyclic_assignment, fixed_count_stragglers, lloyd
+
+    pts = _pts(140, seed=9)
+    a = cyclic_assignment(140, 6, 2)
+    alive = fixed_count_stragglers(6, 1, np.random.default_rng(4))
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(1), jnp.asarray(pts), 3, iters=4).centers
+    )
+    sl = ResilienceSession(a)
+    sm = ResilienceSession(a, executor="mesh")
+    cl = sl.step_cost(pts, centers, alive)
+    cm = sm.step_cost(pts, centers, alive)
+    assert cm == pytest.approx(cl, rel=1e-5)
+    kl = sl.kmedian(pts, 3, alive, local_iters=3, coord_iters=4)
+    km = sm.kmedian(pts, 3, alive, local_iters=3, coord_iters=4)
+    assert km.cost == pytest.approx(kl.cost, rel=1e-5)
+
+
+# --------------------------------------- multi-round mesh run (8 devices)
+
+
+def test_multiround_session_parity_8_devices():
+    """Forced-host-device pattern: a full multi-round elastic run — scenario
+    stream, per-round fused step_cost, mid-run re-assignment with block
+    re-placement — must agree local↔mesh at 1e-5 per round, with zero host
+    solves on the hot path and zero uncovered shards after the patch."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        import jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import (ResilienceSession, ElasticPolicy,
+                                cyclic_assignment, lloyd, make_scenario)
+        rng = np.random.default_rng(0)
+        pts = rng.normal(size=(160, 3)).astype(np.float32)
+        centers = np.asarray(lloyd(jax.random.PRNGKey(0), jnp.asarray(pts), 3,
+                                   iters=4).centers)
+        def run(executor):
+            sess = ResilienceSession(
+                cyclic_assignment(160, 8, 2), executor=executor,
+                elastic=ElasticPolicy(enabled=True, patience=2))
+            scen = make_scenario("deadline", 8, seed=6, p_spike=0.06,
+                                 persistence=1.0, spike_scale=6.0, deadline=2.0)
+            costs, uncovered = [], []
+            for _ in range(12):
+                step = next(scen)
+                ev = sess.observe(step)
+                uncovered.append(ev["uncovered"])
+                if step.alive.any():
+                    costs.append(sess.step_cost(pts, centers, step.alive))
+            return sess, costs, uncovered
+        sl, cl, ul = run("local")
+        sm, cm, um = run("mesh")
+        assert ul == um, (ul, um)
+        for a, b in zip(cl, cm):
+            assert abs(a / b - 1.0) <= 1e-5, (a, b)
+        assert sl.stats.host_solves == 0 and sm.stats.host_solves == 0
+        assert sl.stats.elastic_patches >= 1 and sm.stats.elastic_patches >= 1
+        assert ul[-1] == 0, ul   # coverage restored after the patch
+        print("MULTIROUND_PARITY_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=540, env=env,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "MULTIROUND_PARITY_OK" in out.stdout
+
+
+# ------------------------------------------------ bench: re-solve counters
+
+
+def test_bench_scenarios_reports_zero_host_solves():
+    """Acceptance hook: the compiled-step path must show host_solves=0 on the
+    emitted rows even though every round's pattern starts unseen."""
+    sys.path.insert(0, _REPO)
+    try:
+        from benchmarks import common
+        from benchmarks.bench_scenarios import run as bench_run
+
+        mark = len(common.ROWS)
+        bench_run(n=120, s=6, k=3, rounds=3, executors=("local",))
+        rows = common.ROWS[mark:]
+    finally:
+        sys.path.pop(0)
+    def field(derived, key):
+        return int(derived.split(key + "=")[1].split()[0])
+
+    cells = [r for r in rows if "host_solves=" in r[2]]
+    assert len(cells) == 16  # 4 schemes × 4 scenarios
+    for name, _us, derived in cells:
+        assert field(derived, "host_solves") == 0, (name, derived)
+        assert field(derived, "device_solves") > 0, (name, derived)
+    assert any(field(d, "patches") > 0 for _n, _u, d in cells), (
+        "sweep never exercised an elastic patch"
+    )
