@@ -1,26 +1,31 @@
 # Repo entry points.  Tier-1 is wrapped in a hard 300 s timeout so the
-# "suite silently hangs for minutes" regression class fails loudly in CI
-# (pytest-timeout, when installed via the `test` extra, adds per-test limits).
+# "suite silently hangs for minutes" regression class fails loudly in CI;
+# per-test limits are always on (pytest-timeout when installed via the
+# `test` extra, a SIGALRM fallback in conftest.py otherwise).
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all docs-check bench-kernels bench-scenarios bench
+.PHONY: test test-all docs-check bench-kernels bench-scenarios bench-stream bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: docs-check bench-scenarios  ## everything, including compile-heavy slow-marked smoke tests
+test-all: docs-check bench-scenarios bench-stream  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
 
-docs-check:  ## markdown link lint + the quickstart must run end to end
+docs-check:  ## markdown link lint + the quickstart/streaming examples must run end to end
 	$(PY) tools/check_docs.py
 	timeout 120 $(PY) examples/quickstart.py > /dev/null
+	timeout 120 $(PY) examples/streaming_clustering.py > /dev/null
 
 bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 	$(PY) -m benchmarks.run kernels --emit BENCH_kernels.json
 
 bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor) → BENCH_scenarios.json
 	timeout 300 $(PY) -m benchmarks.run scenarios --emit BENCH_scenarios.json
+
+bench-stream:  ## streaming-layer sweep (ingest rows/s, query p50/p99, compactions) → BENCH_stream.json
+	timeout 300 $(PY) -m benchmarks.run stream --emit BENCH_stream.json
 
 bench:  ## full benchmark sweep
 	$(PY) -m benchmarks.run

@@ -14,6 +14,9 @@ combine out).  Derived fields per row:
 * ``patterns`` — distinct alive masks the cell observed;
 * ``patches`` / ``moved_blocks`` / ``uncovered_rounds`` — elastic activity.
 
+``--trace PATH`` adds a recorded-trace replay column to the sweep (JSONL
+alive-mask traces from :func:`repro.core.record_trace`).
+
     python -m benchmarks.run scenarios --emit BENCH_scenarios.json
     make bench-scenarios
 """
@@ -29,12 +32,9 @@ import numpy as np
 from repro.core import (
     ElasticPolicy,
     ResilienceSession,
-    bernoulli_assignment,
-    cyclic_assignment,
-    fractional_repetition_assignment,
     lloyd,
+    make_assignment,
     make_scenario,
-    singleton_assignment,
 )
 from repro.data.synthetic import gaussian_mixture
 
@@ -45,18 +45,13 @@ SCENARIOS = ("iid", "fixed", "adversarial", "deadline")
 
 
 def _assignment(scheme: str, n: int, s: int, seed: int):
-    if scheme == "singleton":
-        return singleton_assignment(n, s)
-    if scheme == "cyclic":
-        return cyclic_assignment(n, s, 2)
-    if scheme == "fr":
-        return fractional_repetition_assignment(n, s, 2)
-    if scheme == "bernoulli":
-        return bernoulli_assignment(n, s, ell=2.0, rng=np.random.default_rng(seed))
-    raise ValueError(scheme)
+    return make_assignment(
+        scheme, n, s, ell=2, rng=np.random.default_rng(seed)
+        if scheme == "bernoulli" else None,
+    )
 
 
-def _scenario(name: str, s: int, assignment, seed: int):
+def _scenario(name: str, s: int, assignment, seed: int, trace_path=None):
     if name == "iid":
         return make_scenario("iid", s, p_straggler=0.15, seed=seed)
     if name == "fixed":
@@ -70,6 +65,8 @@ def _scenario(name: str, s: int, assignment, seed: int):
             "deadline", s, seed=seed, p_spike=0.06, persistence=1.0,
             spike_scale=6.0, deadline=2.0,
         )
+    if name == "trace":
+        return make_scenario("trace", s, path=trace_path)
     raise ValueError(name)
 
 
@@ -80,6 +77,7 @@ def run(
     rounds: int = 5,
     seed: int = 0,
     executors: tuple[str, ...] = ("local", "mesh"),
+    trace_path: str | None = None,
 ) -> None:
     pts, _, _ = gaussian_mixture(n, k, 3, rng=np.random.default_rng(seed))
     pts = np.asarray(pts, np.float32)
@@ -87,11 +85,12 @@ def run(
         lloyd(jax.random.PRNGKey(seed), jnp.asarray(pts), k, iters=5, median=True).centers
     )
     emit("scen_devices", 0.0, f"devices={jax.device_count()} rounds={rounds}")
+    scenarios = SCENARIOS + (("trace",) if trace_path else ())
     for scheme in SCHEMES:
-        for scen_name in SCENARIOS:
+        for scen_name in scenarios:
             for ex in executors:
                 a = _assignment(scheme, n, s, seed)
-                scen = _scenario(scen_name, s, a, seed + 1)
+                scen = _scenario(scen_name, s, a, seed + 1, trace_path)
                 sess = ResilienceSession(
                     a, executor=ex,
                     elastic=ElasticPolicy(enabled=True, patience=2),
@@ -129,11 +128,16 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--executor", choices=("local", "mesh", "both"), default="both")
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="JSONL alive-mask trace (see repro.core.record_trace); adds a "
+        "trace-replay scenario column to the sweep",
+    )
     args = ap.parse_args()
     executors = ("local", "mesh") if args.executor == "both" else (args.executor,)
     print("name,us_per_call,derived")
     run(n=args.n, s=args.s, k=args.k, rounds=args.rounds, seed=args.seed,
-        executors=executors)
+        executors=executors, trace_path=args.trace)
 
 
 if __name__ == "__main__":

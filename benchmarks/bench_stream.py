@@ -1,0 +1,154 @@
+"""Ingest-throughput × scenario × executor sweep of the streaming layer.
+
+Each cell drives one :class:`repro.stream.StreamingSession`: ``n_batches``
+ingests under a straggler scenario (including a recorded-trace replay cell
+— the trace is recorded from the deadline model at the top of the run and
+replayed via ``make_scenario("trace", path=...)``), one frontier solve, and
+a batched query phase.  Derived fields per row:
+
+* ``rows_s`` — steady-state ingest throughput (points/second);
+* ``compactions_per_ingest`` — level compactions amortized per ingest call
+  (leaf reductions excluded);
+* ``q_p50_us`` / ``q_p99_us`` — per-call latency percentiles of the
+  compiled batched query path;
+* ``host_solves`` / ``blocking`` / ``buckets`` — recovery + tree counters.
+
+All timings are compiled executions (the dispatch layer never auto-selects
+interpret-mode Pallas; a ``stream_devices`` row records the impl the query
+path resolved to).  A warmup pass per executor triggers every compile
+before the clocks start.
+
+    python -m benchmarks.run stream --emit BENCH_stream.json
+    make bench-stream
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import make_scenario, record_trace
+from repro.kernels import dispatch
+from repro.stream import StreamingSession
+
+from .common import emit
+
+SCENARIOS = ("iid", "deadline", "trace")
+
+
+def _scenario(name: str, s: int, seed: int, trace_path: str):
+    if name == "iid":
+        return make_scenario("iid", s, p_straggler=0.15, seed=seed)
+    if name == "deadline":
+        return make_scenario(
+            "deadline", s, seed=seed, p_spike=0.1, persistence=0.6,
+            spike_scale=5.0, deadline=2.0,
+        )
+    if name == "trace":
+        return make_scenario("trace", s, path=trace_path)
+    raise ValueError(name)
+
+
+def _session(d, k, s, leaf, m, fanout, scen, ex) -> StreamingSession:
+    return StreamingSession(
+        d, k, num_nodes=s, leaf_size=leaf, coreset_size=m, fanout=fanout,
+        scenario=scen, executor=ex, seed=0,
+    )
+
+
+def run(
+    n_batches: int = 8,
+    batch: int = 512,
+    d: int = 3,
+    k: int = 4,
+    s: int = 8,
+    leaf: int = 256,
+    m: int = 64,
+    fanout: int = 4,
+    query_batch: int = 256,
+    query_calls: int = 30,
+    seed: int = 0,
+    executors: tuple[str, ...] = ("local",),
+) -> None:
+    rng = np.random.default_rng(seed)
+    batches = [rng.normal(size=(batch, d)).astype(np.float32) for _ in range(n_batches)]
+    queries = rng.normal(size=(query_batch, d)).astype(np.float32)
+    qimpl = dispatch.resolve("assign_min", "auto", queries, np.zeros((k, d), np.float32)).name
+    emit("stream_devices", 0.0, f"devices={jax.device_count()} query_impl={qimpl}")
+    # Record a replayable trace once; the trace cells replay it verbatim.
+    fd, trace_path = tempfile.mkstemp(suffix=".jsonl", prefix="bench_trace_")
+    os.close(fd)
+    try:
+        record_trace(
+            make_scenario("deadline", s, seed=seed + 7, p_spike=0.1,
+                          persistence=0.6, spike_scale=5.0, deadline=2.0),
+            n_batches, trace_path,
+        )
+        for ex in executors:
+            # Warmup: compile every program (leaf reduce, level reduce,
+            # frontier solve, query bucket) outside the timed region.
+            warm = _session(d, k, s, leaf, m, fanout, None, ex)
+            for b in batches[: max(2, (leaf * (fanout + 1)) // batch + 1)]:
+                warm.ingest(b)
+            warm.solve(iters=3)
+            warm.query(queries)
+            for scen_name in SCENARIOS:
+                scen = _scenario(scen_name, s, seed + 1, trace_path)
+                sess = _session(d, k, s, leaf, m, fanout, scen, ex)
+                t0 = time.perf_counter()
+                for b in batches:
+                    sess.ingest(b)
+                dt = time.perf_counter() - t0
+                sess.solve(iters=5)
+                lats = []
+                for _ in range(query_calls):
+                    q0 = time.perf_counter()
+                    sess.query(queries)
+                    lats.append((time.perf_counter() - q0) * 1e6)
+                st = sess.stats
+                emit(
+                    f"stream_{scen_name}_{ex}",
+                    dt / n_batches * 1e6,
+                    f"rows_s={n_batches * batch / dt:.0f} "
+                    f"compactions_per_ingest={st['compactions'] / n_batches:.2f} "
+                    f"q_p50_us={np.percentile(lats, 50):.0f} "
+                    f"q_p99_us={np.percentile(lats, 99):.0f} "
+                    f"buckets={st['buckets']} levels={st['levels']} "
+                    f"host_solves={st['recovery_host_solves']} "
+                    f"blocking={st['blocking_compactions']} "
+                    f"patches={st['recovery_elastic_patches']}",
+                )
+    finally:
+        os.unlink(trace_path)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--leaf", type=int, default=256)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--fanout", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--executor", choices=("local", "mesh", "both"), default="local")
+    args = ap.parse_args()
+    executors = ("local", "mesh") if args.executor == "both" else (args.executor,)
+    print("name,us_per_call,derived")
+    run(
+        n_batches=args.batches, batch=args.batch, d=args.d, k=args.k, s=args.s,
+        leaf=args.leaf, m=args.m, fanout=args.fanout, seed=args.seed,
+        executors=executors,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from . import (
     bench_fig1,
     bench_kernels,
     bench_scenarios,
+    bench_stream,
     bench_training,
 )
 from .common import emit
@@ -34,6 +35,7 @@ BENCHES = {
     "training": bench_training.run,
     "kernels": bench_kernels.run,
     "scenarios": bench_scenarios.run,
+    "stream": bench_stream.run,
 }
 
 

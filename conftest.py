@@ -1,12 +1,58 @@
-"""Root pytest config.
+"""Root pytest config: per-test time limits, always on.
 
-Applies a per-test time limit when the optional pytest-timeout plugin (from
-the `test` extra) is installed — set here instead of an ini `timeout` key so
-environments without the plugin don't emit unknown-option warnings.  The
-Makefile's coreutils `timeout` wrapper remains the plugin-free backstop.
+With the optional pytest-timeout plugin (from the `test` extra) installed,
+the limit is applied through it — set here instead of an ini `timeout` key
+so environments without the plugin don't emit unknown-option warnings.
+Without the plugin, a SIGALRM hookwrapper enforces the same class of limit,
+so tier-1 gets per-test limits in every environment (previously the
+plugin-less case silently ran unlimited and only the Makefile's whole-suite
+coreutils `timeout` caught hangs).
+
+`REPRO_TEST_TIMEOUT` overrides the per-test seconds (0 disables); the
+fallback default is looser than the plugin's because a bare SIGALRM cannot
+grant the grace periods pytest-timeout can.
 """
+
+import os
+import signal
+
+import pytest
+
+
+def _limit(default: int) -> int:
+    try:
+        return int(os.environ.get("REPRO_TEST_TIMEOUT", str(default)))
+    except ValueError:
+        return default
 
 
 def pytest_configure(config):
-    if config.pluginmanager.hasplugin("timeout") and not config.getoption("--timeout", None):
-        config.option.timeout = 120  # generous: slowest known test ≈ 86 s
+    if config.pluginmanager.hasplugin("timeout"):
+        if not config.getoption("--timeout", None):
+            config.option.timeout = _limit(120)  # slowest known test ≈ 86 s
+        config._repro_alarm = 0
+    else:
+        # SIGALRM fallback: only where alarms exist (POSIX main thread).
+        config._repro_alarm = _limit(240) if hasattr(signal, "SIGALRM") else 0
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    limit = getattr(item.config, "_repro_alarm", 0)
+    if not limit:
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded the {limit} s per-test limit "
+            "(REPRO_TEST_TIMEOUT overrides; 0 disables)"
+        )
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

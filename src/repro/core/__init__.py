@@ -6,6 +6,7 @@ from .assignment import (  # noqa: F401
     bernoulli_assignment,
     cyclic_assignment,
     fractional_repetition_assignment,
+    make_assignment,
     min_cover_after_stragglers,
     node_loads,
     satisfies_property1,
@@ -30,10 +31,12 @@ from .stragglers import (  # noqa: F401
     IIDScenario,
     ScenarioStep,
     StragglerScenario,
+    TraceScenario,
     adversarial_stragglers,
     fixed_count_stragglers,
     make_scenario,
     random_stragglers,
+    record_trace,
 )
 from .resilience import (  # noqa: F401
     ElasticPolicy,
@@ -61,6 +64,7 @@ from .kmedian import (  # noqa: F401
 )
 from .coreset import (  # noqa: F401
     Coreset,
+    merge_coresets,
     resilient_coreset,
     sensitivity_coreset,
     uniform_coreset,

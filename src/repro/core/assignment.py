@@ -40,6 +40,7 @@ __all__ = [
     "fractional_repetition_assignment",
     "cyclic_assignment",
     "singleton_assignment",
+    "make_assignment",
     "node_loads",
     "shard_replication",
     "min_cover_after_stragglers",
@@ -176,6 +177,37 @@ def singleton_assignment(n: int, s: int) -> Assignment:
     mat = np.zeros((s, n), dtype=np.uint8)
     mat[np.arange(n) % s, np.arange(n)] = 1
     return Assignment(matrix=mat, scheme="singleton", params={"ell": 1})
+
+
+def make_assignment(
+    scheme: str,
+    n: int,
+    s: int,
+    *,
+    ell: float = 2,
+    rng: Optional[np.random.Generator] = None,
+    **kwargs,
+) -> Assignment:
+    """Factory over the four construction families, keyed by scheme name.
+
+    ``"bernoulli"`` / ``"cyclic"`` / ``"fractional_repetition"`` (alias
+    ``"fr"``) / ``"singleton"``.  ``ell`` is the per-shard replication
+    (ignored by singleton); remaining kwargs go to the construction.  One
+    shared spelling for benchmarks, sessions, and the streaming layer —
+    instead of each call site keeping its own if/elif ladder.
+    """
+    if scheme == "bernoulli":
+        return bernoulli_assignment(n, s, ell=float(ell), rng=rng, **kwargs)
+    if scheme == "cyclic":
+        return cyclic_assignment(n, s, int(ell), **kwargs)
+    if scheme in ("fractional_repetition", "fr"):
+        return fractional_repetition_assignment(n, s, int(ell), **kwargs)
+    if scheme == "singleton":
+        return singleton_assignment(n, s, **kwargs)
+    raise ValueError(
+        f"unknown assignment scheme {scheme!r}; expected "
+        "bernoulli/cyclic/fractional_repetition/singleton"
+    )
 
 
 def node_loads(assignment: Assignment) -> np.ndarray:

@@ -23,7 +23,13 @@ from .executor import Executor
 from ..kernels.pairwise_dist import ops as pd
 from ..kernels.weighted_segsum import ops as ss
 
-__all__ = ["Coreset", "sensitivity_coreset", "uniform_coreset", "resilient_coreset"]
+__all__ = [
+    "Coreset",
+    "sensitivity_coreset",
+    "uniform_coreset",
+    "resilient_coreset",
+    "merge_coresets",
+]
 
 _EPS = 1e-12
 
@@ -70,16 +76,33 @@ def sensitivity_coreset(
 
 
 @functools.lru_cache(maxsize=None)
-def _local_coreset_fn(k: int, m: int, squared: bool, bicriteria_iters: int, impl: str):
-    """Per-node sensitivity coreset with the Lemma-3 ``b`` weighting applied
-    on device.  Memoized so the executor seam can reuse its jit cache."""
+def _reduce_fn(k: int, m: int, squared: bool, bicriteria_iters: int, impl: str):
+    """Weighted sensitivity coreset of an (already weighted) summary — the
+    *reduce* half of merge-and-reduce, used by the streaming tree through
+    :meth:`~repro.core.executor.Executor.replicated_compute`.  Memoized so
+    the executor seam can key its jit cache on the function identity."""
 
-    def one(key, x, w, b):
+    def one(key, x, w):
         cs = sensitivity_coreset(
             key, x, k, m, weights=w, squared=squared,
             bicriteria_iters=bicriteria_iters, impl=impl,
         )
-        return cs.points, b.astype(cs.weights.dtype) * cs.weights
+        return cs.points, cs.weights
+
+    return one
+
+
+@functools.lru_cache(maxsize=None)
+def _local_coreset_fn(k: int, m: int, squared: bool, bicriteria_iters: int, impl: str):
+    """Per-node sensitivity coreset with the Lemma-3 ``b`` weighting applied
+    on device.  Delegates the sampling to :func:`_reduce_fn` (one call site
+    for the construction) and is memoized for the executors' jit caches."""
+
+    reduce_one = _reduce_fn(k, m, squared, bicriteria_iters, impl)
+
+    def one(key, x, w, b):
+        pts, wts = reduce_one(key, x, w)
+        return pts, b.astype(wts.dtype) * wts
 
     return one
 
@@ -124,6 +147,20 @@ def resilient_coreset(
     return Coreset(
         points=jnp.reshape(pts, (s * m_per_node, d)),
         weights=jnp.reshape(wts, (s * m_per_node,)),
+    )
+
+
+def merge_coresets(*coresets: Coreset) -> Coreset:
+    """Feldman–Langberg merge: the concatenation of ε-coresets of disjoint
+    sets is an ε-coreset of their union (cost is additive and each summand is
+    preserved to 1±ε).  This is the *merge* half of merge-and-reduce — the
+    streaming tree's :mod:`repro.stream.buffer` rests on it, and the
+    composability property is pinned by tests/test_stream.py."""
+    if not coresets:
+        raise ValueError("merge_coresets needs at least one coreset")
+    return Coreset(
+        points=jnp.concatenate([c.points for c in coresets], axis=0),
+        weights=jnp.concatenate([c.weights for c in coresets], axis=0),
     )
 
 

@@ -89,6 +89,20 @@ class Executor:
         """
         raise NotImplementedError
 
+    def replicated_compute(self, fn: Callable, args: Sequence[Any]):
+        """Run ``fn(*args)`` redundantly on every node; return ONE result.
+
+        Compute redundancy, the dual of the paper's data redundancy: all
+        inputs are replicated, every node computes the identical output, and
+        any alive replica serves it — a straggler mid-computation costs
+        nothing.  Locally one compiled call stands in for all replicas; the
+        mesh executor really does run the program on every device (see
+        :meth:`repro.launch.distributed.MeshExecutor.replicated_compute`).
+        Used by the streaming layer's tree compactions
+        (:mod:`repro.stream.buffer`).
+        """
+        raise NotImplementedError
+
     # --------------------------------------------------- placement helpers
     # Sessions (repro.core.resilience) keep node-stacked inputs resident
     # across rounds; these helpers make placement explicit so only changed
@@ -158,6 +172,12 @@ class LocalExecutor(Executor):
             jnp.asarray(A, jnp.float32), jnp.asarray(alive, bool),
             *node_args, *broadcast_args,
         )
+
+    def replicated_compute(self, fn, args):
+        key = ("replicated", fn)
+        if key not in self._jitted:
+            self._jitted[key] = jax.jit(fn)
+        return self._jitted[key](*(jnp.asarray(a) for a in args))
 
     def update_node_rows(self, arr, rows, new_rows):
         idx = jnp.asarray(list(rows), jnp.int32)

@@ -76,6 +76,7 @@ class SessionStats:
     host_solves: int = 0       # host LP/NNLS solves (offline/exact path)
     device_solves: int = 0     # on-device solves (fused compiled-step path)
     cache_hits: int = 0        # pattern-cache hits across ALL consumers
+    coverage_checks: int = 0   # per-pattern coverage validations COMPUTED
     elastic_patches: int = 0   # assignment patches applied
     moved_node_blocks: int = 0 # node rows re-placed incrementally
     cache_invalidations: int = 0  # entries dropped by patches
@@ -111,6 +112,11 @@ class ResilienceSession:
         # foreign assignment while accepting pre-patch references mid-run.
         self._assignment_lineage = {id(assignment)}
         self._cache: dict[bytes, RecoveryResult] = {}
+        # Per-pattern coverage validation (hoisted out of the per-call prelude
+        # of resilient_{coreset,kmedian,pca,cost}): alive-mask bytes →
+        # (has_surviving_data, uncovered shard ids).  Same invalidation rule
+        # as the recovery cache.
+        self._coverage: dict[bytes, tuple[bool, np.ndarray]] = {}
         self._streak = np.zeros(assignment.num_nodes, dtype=np.int64)
         # Host-side packed shards, keyed by the caller's points object.
         self._pack_src = None
@@ -156,6 +162,34 @@ class ResilienceSession:
         res = self.recovery(alive)
         return res.b_full.astype(np.float32), res
 
+    def validate_coverage(
+        self, alive: np.ndarray, rec: Optional[RecoveryResult] = None
+    ) -> np.ndarray:
+        """Cached per-pattern coverage validation; returns the uncovered
+        shard ids for this pattern.
+
+        Every algorithm entry point used to re-scan the recovery weights on
+        each call — pure host-side overhead for a streaming consumer that
+        solves against the same pattern round after round.  The validation is
+        computed once per (pattern, assignment version) and memoized
+        alongside the recovery cache (``SessionStats.coverage_checks`` counts
+        actual computations, so the caching is auditable).  Raises if no
+        surviving node holds any data (the all-dead guard).
+        """
+        alive = np.asarray(alive, dtype=bool)
+        key = alive.tobytes()
+        hit = self._coverage.get(key)
+        if hit is None:
+            if rec is None:
+                rec = self.recovery(alive)
+            hit = (bool(np.any(rec.b_full > 0)), np.asarray(rec.uncovered))
+            self._coverage[key] = hit
+            self.stats.coverage_checks += 1
+        has_data, uncovered = hit
+        if not has_data:
+            raise ValueError("no surviving nodes with data — cannot form union")
+        return uncovered
+
     # -------------------------------------------------- prelude for Algs 1–3
 
     def prepare(self, points, alive):
@@ -169,8 +203,7 @@ class ResilienceSession:
         """
         alive = np.asarray(alive, dtype=bool)
         rec = self.recovery(alive)
-        if not np.any(rec.b_full > 0):
-            raise ValueError("no surviving nodes with data — cannot form union")
+        self.validate_coverage(alive, rec)  # cached per pattern, raises all-dead
         pts32, xs, ws = self._packed_shards(points)
         return pts32, alive, rec, self.executor, xs, ws
 
@@ -388,6 +421,12 @@ class ResilienceSession:
             if mask[moved].any():
                 del self._cache[key]
                 self.stats.cache_invalidations += 1
+        # Coverage entries follow the same validity rule, but are keyed
+        # independently (validate_coverage with a caller-supplied rec never
+        # touches _cache) — sweep them on their own keys.
+        for key in list(self._coverage):
+            if np.frombuffer(key, dtype=bool)[moved].any():
+                del self._coverage[key]
 
     def _replace_moved_blocks(self, moved_nodes: list[int], old_m: int) -> None:
         """Incrementally refresh the device-resident packed shards: only the

@@ -23,6 +23,7 @@ Two API layers:
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
@@ -40,6 +41,8 @@ __all__ = [
     "FixedCountScenario",
     "AdversarialScenario",
     "DeadlineScenario",
+    "TraceScenario",
+    "record_trace",
     "make_scenario",
 ]
 
@@ -284,18 +287,107 @@ class DeadlineScenario(StragglerScenario):
         )
 
 
+class TraceScenario(StragglerScenario):
+    """Replay a recorded alive-mask sequence from a JSONL trace file.
+
+    Each line is a JSON object with an ``"alive"`` array of 0/1 (or bools),
+    one entry per node; ``"latencies"`` is optional.  Extra keys (``name``,
+    ``index``, ``derived`` … — the ``BENCH_scenarios.json`` row fields) are
+    ignored, so annotated benchmark rows replay as-is.  The trace is loaded
+    once at construction: replay is deterministic, :meth:`reset` rewinds to
+    step 0, and — scenarios being infinite iterators — the stream wraps
+    around at the end of the trace (``loop=False`` raises ``StopIteration``
+    instead, for consumers that want exactly the recorded rounds).
+    """
+
+    name = "trace"
+
+    def __init__(self, num_nodes: int, path: str, *, loop: bool = True):
+        super().__init__(num_nodes)
+        self.path = str(path)
+        self.loop = bool(loop)
+        self._masks: list[np.ndarray] = []
+        self._lats: list[np.ndarray] = []
+        with open(self.path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError as e:
+                    raise ValueError(f"{self.path}:{lineno}: not JSON ({e})") from None
+                if not isinstance(row, dict) or "alive" not in row:
+                    raise ValueError(
+                        f"{self.path}:{lineno}: trace rows need an 'alive' array"
+                    )
+                alive = np.asarray(row["alive"], dtype=bool)
+                if alive.shape != (self.num_nodes,):
+                    raise ValueError(
+                        f"{self.path}:{lineno}: alive has {alive.size} entries, "
+                        f"scenario has {self.num_nodes} nodes"
+                    )
+                self._masks.append(alive)
+                lat = row.get("latencies")
+                self._lats.append(
+                    np.asarray(lat, np.float64)
+                    if lat is not None
+                    else np.zeros((0,), np.float64)
+                )
+        if not self._masks:
+            raise ValueError(f"{self.path}: empty trace")
+
+    def __len__(self) -> int:
+        return len(self._masks)
+
+    def _next(self) -> ScenarioStep:
+        if self._index >= len(self._masks) and not self.loop:
+            raise StopIteration
+        i = self._index % len(self._masks)
+        return ScenarioStep(
+            alive=self._masks[i].copy(),
+            latencies=self._lats[i].copy(),
+            spiked=np.zeros((0,), dtype=bool),
+            index=self._index,
+        )
+
+
+def record_trace(scenario: StragglerScenario, rounds: int, path: str) -> int:
+    """Record ``rounds`` steps of any scenario to a JSONL trace file.
+
+    The rows are the :class:`TraceScenario` input schema (``alive`` +
+    optional ``latencies``, annotated with the source scenario's ``name`` and
+    step ``index``).  Returns the number of rows written.
+    """
+    with open(path, "w", encoding="utf-8") as f:
+        for _ in range(rounds):
+            step = next(scenario)
+            row: dict = {
+                "name": scenario.name,
+                "index": int(step.index),
+                "alive": np.asarray(step.alive, dtype=int).tolist(),
+            }
+            if step.latencies.size:
+                row["latencies"] = [float(x) for x in step.latencies]
+            f.write(json.dumps(row) + "\n")
+    return rounds
+
+
 def make_scenario(
     name: str,
     num_nodes: int,
     *,
     assignment: Optional[Assignment] = None,
+    path: Optional[str] = None,
     **kwargs,
 ) -> StragglerScenario:
-    """Factory over the four models: iid / fixed / adversarial / deadline.
+    """Factory over the five models: iid / fixed / adversarial / deadline /
+    trace.
 
-    ``assignment`` is required (and only used) by the adversarial scenario.
-    Remaining kwargs go to the scenario constructor (``p_straggler``, ``t``,
-    ``seed``, or the deadline-simulator knobs).
+    ``assignment`` is required (and only used) by the adversarial scenario;
+    ``path`` (a JSONL trace file) by the trace scenario.  Remaining kwargs go
+    to the scenario constructor (``p_straggler``, ``t``, ``seed``, ``loop``,
+    or the deadline-simulator knobs).
     """
     if name == "iid":
         return IIDScenario(num_nodes, **kwargs)
@@ -307,6 +399,10 @@ def make_scenario(
         return AdversarialScenario(assignment, **kwargs)
     if name == "deadline":
         return DeadlineScenario(num_nodes, **kwargs)
+    if name == "trace":
+        if path is None:
+            raise ValueError("trace scenario needs path= (a JSONL trace file)")
+        return TraceScenario(num_nodes, path, **kwargs)
     raise ValueError(
-        f"unknown scenario {name!r}; expected iid/fixed/adversarial/deadline"
+        f"unknown scenario {name!r}; expected iid/fixed/adversarial/deadline/trace"
     )

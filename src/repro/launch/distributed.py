@@ -200,6 +200,30 @@ class MeshExecutor(Executor):
             *node_args, *broadcast_args,
         )
 
+    def replicated_compute(self, fn, args):
+        """Genuinely redundant execution: the same program on EVERY device.
+
+        Inputs are placed replicated (``P()``) and the computation runs under
+        ``shard_map`` with fully-replicated specs, so each mesh device owns a
+        complete copy of the result — the streaming layer's tree compactions
+        survive any straggling device without re-execution or data movement.
+        The host fetches from whichever replica is local; numerically all
+        replicas are identical (same program, same inputs).
+        """
+        key = ("replicated", fn, len(args))
+        if key not in self._jitted:
+            def step(*a):
+                return fn(*a)
+
+            n = len(args)
+            sharded = shard_map(
+                step, mesh=self.mesh, in_specs=(P(),) * n, out_specs=P(),
+                check_vma=False,
+            )
+            self._jitted[key] = jax.jit(sharded)
+        placed = tuple(self._place(a, P()) for a in args)
+        return self._jitted[key](*placed)
+
     # --------------------------------------------------- placement helpers
 
     def place_node_stacked(self, arr):

@@ -1,0 +1,31 @@
+"""Streaming resilient clustering (`repro.stream`).
+
+The batch pipeline solves one static dataset, assigned once.  This package
+pushes the paper's redundancy guarantee to *arriving* data via
+Feldman–Langberg merge-and-reduce: each level of a bounded-memory coreset
+tree is a set of buckets treated as shards, placed redundantly per
+:mod:`repro.core.assignment`, compacted through the executor seam, and
+recovered with the pattern-keyed cache of a
+:class:`~repro.core.resilience.ResilienceSession` — so a straggler
+mid-compaction loses no tree level.
+
+* :mod:`repro.stream.buffer` — the merge-and-reduce tree itself.
+* :mod:`repro.stream.session` — :class:`StreamingSession`:
+  ``ingest(batch)`` → redundant placement + level compactions,
+  ``solve()`` → resilient k-median / PCA over the tree frontier.
+* :mod:`repro.stream.query` — compiled, batched nearest-center queries
+  with a per-query staleness bound.
+"""
+
+from .buffer import Bucket, StreamBuffer  # noqa: F401
+from .query import QueryEngine, QueryResult  # noqa: F401
+from .session import StreamingSession, StreamSolveResult  # noqa: F401
+
+__all__ = [
+    "Bucket",
+    "StreamBuffer",
+    "QueryEngine",
+    "QueryResult",
+    "StreamingSession",
+    "StreamSolveResult",
+]

@@ -1,0 +1,250 @@
+"""Bounded-memory merge-and-reduce coreset tree with redundant bucket placement.
+
+Classic streaming construction (Bentley–Saxe over Feldman–Langberg
+composability, cited in :mod:`repro.core.coreset`): arriving points fill a
+raw *leaf* buffer; every full leaf is reduced to an m-point sensitivity
+coreset (a level-0 *bucket*); whenever a level accumulates ``fanout``
+buckets they are merged and reduced into one bucket a level up.  Memory is
+``O(leaf + fanout · m · levels)`` with ``levels = O(log n)``.
+
+What the paper adds — and what this module is really about — is making the
+tree *straggler-proof*:
+
+* **Buckets are shards.**  The ``fanout`` buckets consumed by a compaction
+  are the shard set of a :class:`~repro.core.assignment.Assignment`
+  (``n = fanout`` columns, ``s`` worker nodes), so every bucket lives on
+  ``ℓ`` nodes.  A compaction under an alive mask recovers each bucket's
+  contribution through the session's cached recovery solve: the recovered
+  per-bucket mass is ``a_j = (bᵀA_R)_j ∈ [1, 1+δ]`` — and because replicas
+  are verbatim copies, the Lemma-3 b-weighted union collapses to the
+  canonical bucket scaled by ``a_j``.  Under fractional repetition (disjoint
+  replica groups per bucket — the streaming default) recovery is exact for
+  *every* coverage-preserving pattern, so the recovered merge is
+  bit-identical to the no-straggler merge; schemes whose buckets share
+  holder nodes (cyclic with ``fanout < s``, bernoulli) can be forced to
+  δ > 0 by some patterns and then degrade gracefully within the Lemma-3
+  band.
+* **Compactions are replicated compute.**  The reduce
+  (:func:`~repro.core.coreset.sensitivity_coreset` of the merged summary,
+  PRNG-keyed by a compaction counter, never by node identity) runs through
+  :meth:`Executor.replicated_compute` — every node/device computes the
+  identical bucket, so a node straggling mid-compaction costs nothing.
+* **A pattern that would orphan a bucket blocks instead of losing it.**
+  If the mask leaves some bucket with zero alive replicas, the compaction
+  falls back to the all-alive recovery (the real-system analogue of waiting
+  out the straggler) and counts it in ``blocking_compactions`` — tree
+  levels are never silently dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..core.coreset import _reduce_fn
+from ..core.resilience import ResilienceSession
+
+__all__ = ["Bucket", "StreamBuffer"]
+
+_MASS_SNAP_TOL = 1e-6  # |a_j − 1| below this is LP round-off, not real δ
+
+
+@dataclasses.dataclass
+class Bucket:
+    """One node-replicated weighted summary in the tree."""
+
+    points: np.ndarray   # (m, d) float32
+    weights: np.ndarray  # (m,) float32
+    level: int           # 0 = compacted leaf
+    seq: int             # creation index, unique across the run
+
+    @property
+    def size(self) -> int:
+        return int(self.points.shape[0])
+
+
+class StreamBuffer:
+    """The merge-and-reduce tree.  Driven by
+    :class:`repro.stream.session.StreamingSession`; usable standalone with
+    any :class:`~repro.core.resilience.ResilienceSession` whose assignment
+    has ``num_shards == fanout`` (the bucket→node placement)."""
+
+    def __init__(
+        self,
+        d: int,
+        k: int,
+        *,
+        session: ResilienceSession,
+        leaf_size: int = 512,
+        coreset_size: int = 128,
+        squared: bool = False,
+        bicriteria_iters: int = 4,
+        impl: str = "auto",
+        seed: int = 0,
+    ):
+        self.d, self.k = int(d), int(k)
+        self.leaf_size = int(leaf_size)
+        self.m = int(coreset_size)
+        self.session = session
+        self.fanout = session.num_shards
+        if self.fanout < 2:
+            raise ValueError(f"fanout (assignment shards) must be ≥ 2, got {self.fanout}")
+        if not 1 <= self.m <= self.leaf_size:
+            raise ValueError(
+                f"need 1 <= coreset_size <= leaf_size, got {self.m} / {self.leaf_size}"
+            )
+        self.squared = bool(squared)
+        self.bicriteria_iters = int(bicriteria_iters)
+        self.impl = impl
+        self._base_key = jax.random.PRNGKey(seed)
+        self._pending: list[np.ndarray] = []
+        self._pending_n = 0
+        self.levels: list[list[Bucket]] = []
+        # Counters (surfaced through StreamingSession.stats / bench_stream).
+        self.compactions = 0            # level compactions (merge+reduce)
+        self.leaf_compactions = 0       # raw leaf → level-0 bucket reductions
+        self.blocking_compactions = 0   # fell back to all-alive recovery
+        self._seq = 0
+
+    # ------------------------------------------------------------- ingest
+
+    def add_batch(self, points: np.ndarray, alive: Optional[np.ndarray] = None) -> dict:
+        """Buffer arriving points; compact every full leaf and cascade.
+
+        ``alive`` is the straggler mask in force for any compaction this
+        batch triggers (defaults to all-alive).  Returns a report dict.
+        """
+        pts = np.asarray(points, dtype=np.float32)
+        if pts.ndim != 2 or pts.shape[1] != self.d:
+            raise ValueError(f"expected (n, {self.d}) batch, got {pts.shape}")
+        alive = (
+            np.ones(self.session.num_nodes, dtype=bool)
+            if alive is None
+            else np.asarray(alive, dtype=bool)
+        )
+        c0, l0, b0 = self.compactions, self.leaf_compactions, self.blocking_compactions
+        if len(pts):
+            self._pending.append(pts)
+            self._pending_n += len(pts)
+        while self._pending_n >= self.leaf_size:
+            leaf = self._pop_leaf()
+            bucket = self._reduce(leaf, np.ones(len(leaf), np.float32), level=0)
+            self._push(bucket, alive)
+        return {
+            "leaves": self.leaf_compactions - l0,
+            "compactions": self.compactions - c0,
+            "blocking": self.blocking_compactions - b0,
+            "buckets": self.num_buckets,
+            "levels": len(self.levels),
+            "pending": self._pending_n,
+        }
+
+    def _pop_leaf(self) -> np.ndarray:
+        out, need = [], self.leaf_size
+        while need:
+            head = self._pending[0]
+            if len(head) <= need:
+                out.append(head)
+                need -= len(head)
+                self._pending.pop(0)
+            else:
+                out.append(head[:need])
+                self._pending[0] = head[need:]
+                need = 0
+        self._pending_n -= self.leaf_size
+        return np.concatenate(out, axis=0)
+
+    # -------------------------------------------------------- compactions
+
+    def _push(self, bucket: Bucket, alive: np.ndarray) -> None:
+        while len(self.levels) <= bucket.level:
+            self.levels.append([])
+        self.levels[bucket.level].append(bucket)
+        lvl = bucket.level
+        while lvl < len(self.levels) and len(self.levels[lvl]) >= self.fanout:
+            group = self.levels[lvl][: self.fanout]
+            del self.levels[lvl][: self.fanout]
+            merged_x, merged_w = self._recovered_merge(group, alive)
+            nb = self._reduce(merged_x, merged_w, level=lvl + 1)
+            self.compactions += 1
+            while len(self.levels) <= nb.level:
+                self.levels.append([])
+            self.levels[nb.level].append(nb)
+            lvl += 1
+
+    def _recovered_merge(
+        self, buckets: list[Bucket], alive: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Lemma-3 recovery of one level group: per-bucket masses from the
+        session's pattern-keyed cached solve (replicas are verbatim, so the
+        b-weighted union collapses to canonical buckets × ``a_j``)."""
+        sess = self.session
+        if not alive.any():
+            self.blocking_compactions += 1
+            alive = np.ones(sess.num_nodes, dtype=bool)
+        rec = sess.recovery(alive)
+        if len(rec.uncovered) or not np.any(rec.b_full > 0):
+            # The pattern would orphan a bucket — wait out the stragglers
+            # rather than lose a level.
+            self.blocking_compactions += 1
+            rec = sess.recovery(np.ones(sess.num_nodes, dtype=bool))
+            if len(rec.uncovered):
+                raise ValueError(
+                    "bucket assignment leaves shards uncovered even with all "
+                    f"nodes alive (scheme {sess.assignment.scheme!r})"
+                )
+        a = np.asarray(rec.a, np.float64)
+        masses = np.where(np.abs(a - 1.0) <= _MASS_SNAP_TOL, 1.0, a).astype(np.float32)
+        xs = np.concatenate([b.points for b in buckets], axis=0)
+        ws = np.concatenate(
+            [b.weights * masses[j] for j, b in enumerate(buckets)], axis=0
+        )
+        return xs, ws
+
+    def _reduce(self, x: np.ndarray, w: np.ndarray, level: int) -> Bucket:
+        """Reduce a (merged) weighted summary to an m-point bucket, computed
+        redundantly on every node through the executor seam.  The PRNG key is
+        a pure function of the compaction counter — never of node identity or
+        the straggler pattern — so every replica (and every coverage-
+        preserving pattern under a δ = 0 scheme) produces the same bucket."""
+        key = jax.random.fold_in(self._base_key, self._seq)
+        fn = _reduce_fn(self.k, self.m, self.squared, self.bicriteria_iters, self.impl)
+        pts, wts = self.session.executor.replicated_compute(fn, (key, x, w))
+        if level == 0:
+            self.leaf_compactions += 1
+        b = Bucket(
+            points=np.asarray(pts), weights=np.asarray(wts), level=level, seq=self._seq
+        )
+        self._seq += 1
+        return b
+
+    # ----------------------------------------------------------- frontier
+
+    @property
+    def num_buckets(self) -> int:
+        return sum(len(lv) for lv in self.levels)
+
+    @property
+    def summary_points(self) -> int:
+        """Points held across all buckets (the memory bound, minus the leaf)."""
+        return sum(b.size for lv in self.levels for b in lv)
+
+    def frontier(self) -> tuple[np.ndarray, np.ndarray]:
+        """The tree's current weighted summary: all buckets plus the raw
+        (not yet compacted) leaf buffer at weight 1.  By merge-and-reduce
+        composability this is an ε·levels-coreset of everything ingested."""
+        xs = [b.points for lv in self.levels for b in lv]
+        ws = [b.weights for lv in self.levels for b in lv]
+        if self._pending:
+            pend = np.concatenate(self._pending, axis=0)
+            xs.append(pend)
+            ws.append(np.ones(len(pend), np.float32))
+        if not xs:
+            return (
+                np.zeros((0, self.d), np.float32),
+                np.zeros((0,), np.float32),
+            )
+        return np.concatenate(xs, axis=0), np.concatenate(ws, axis=0)

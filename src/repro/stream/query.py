@@ -1,0 +1,116 @@
+"""Compiled, batched nearest-center / cluster-membership query path.
+
+Serving queries against a streaming model is a different workload from
+building it: high QPS, small batches of arbitrary size, and a model (the
+center set) that lags ingestion.  Three properties matter:
+
+* **No recompiles on the hot path.**  Query batches are padded up to
+  power-of-two shape buckets, so one compiled program per
+  ``(bucket, d, k)`` serves every batch size in the bucket.  The inner op
+  is :func:`repro.kernels.pairwise_dist.ops.assign_min`, resolved by the
+  dispatch registry — compiled XLA off-TPU, Pallas on TPU, never
+  interpret-mode.
+* **Bounded staleness, reported.**  Every result carries how many points
+  (and ingest calls) arrived after the answering centers were solved — the
+  serving-side analogue of the tree's ε band.  Callers decide their own
+  freshness policy; the engine never silently serves an unbounded-stale
+  answer without saying so.
+* **Zero coupling to the build path.**  The engine holds no tree state:
+  it is handed (queries, centers, staleness) by
+  :class:`repro.stream.session.StreamingSession`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.pairwise_dist import ops as pd
+
+__all__ = ["QueryResult", "QueryEngine"]
+
+_MIN_BATCH = 64  # smallest compiled bucket: tiny batches share one program
+
+
+def _bucket_size(n: int) -> int:
+    b = _MIN_BATCH
+    while b < n:
+        b <<= 1
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _assign_fn(impl: str):
+    """One process-wide compiled assigner per impl: engines come and go (one
+    per session), the jit cache must not — a fresh closure per engine would
+    re-lower on every new session and show up as a p99 latency cliff."""
+
+    @jax.jit
+    def run(q, c):
+        idx, d2 = pd.assign_min(q, c, impl=impl)
+        return idx, jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    return run
+
+
+class QueryResult(NamedTuple):
+    """Answers plus the per-query staleness bound."""
+
+    indices: np.ndarray       # (n,) int32 — nearest-center / cluster id
+    distances: np.ndarray     # (n,) float32 — unsquared distance to it
+    staleness_points: int     # points ingested since the centers were solved
+    staleness_ingests: int    # ingest calls since the centers were solved
+    version: int              # centers version that answered
+
+
+class QueryEngine:
+    """Stateless-model query executor with a shape-bucketed jit cache."""
+
+    def __init__(self, impl: str = "auto"):
+        self.impl = impl
+        self._buckets: set = set()  # (bucket, d, k) shapes this engine served
+        self.queries_served = 0
+
+    @property
+    def compiled_buckets(self) -> int:
+        return len(self._buckets)
+
+    def assign(
+        self,
+        queries,
+        centers,
+        *,
+        staleness_points: int = 0,
+        staleness_ingests: int = 0,
+        version: int = 0,
+    ) -> QueryResult:
+        """Batched nearest-center assignment of ``queries`` to ``centers``."""
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (n, d), got {q.shape}")
+        n, d = q.shape
+        if n == 0:
+            return QueryResult(
+                np.zeros((0,), np.int32), np.zeros((0,), np.float32),
+                staleness_points, staleness_ingests, version,
+            )
+        c = np.asarray(centers, dtype=np.float32)
+        bucket = _bucket_size(n)
+        qp = np.zeros((bucket, d), np.float32)
+        qp[:n] = q  # zero padding rows are sliced off below
+        idx, dist = _assign_fn(self.impl)(qp, jnp.asarray(c))
+        self._buckets.add((bucket, d, c.shape[0]))
+        self.queries_served += n
+        return QueryResult(
+            indices=np.asarray(idx[:n], np.int32),
+            distances=np.asarray(dist[:n], np.float32),
+            staleness_points=staleness_points,
+            staleness_ingests=staleness_ingests,
+            version=version,
+        )

@@ -1,0 +1,268 @@
+"""StreamingSession — the always-on front door of the streaming layer.
+
+One object owns the whole ingest → compact → solve → serve lifecycle:
+
+* ``ingest(batch)`` feeds arriving points into the merge-and-reduce tree
+  (:class:`~repro.stream.buffer.StreamBuffer`).  The straggler mask for the
+  round comes from an attached scenario (any
+  :class:`~repro.core.stragglers.StragglerScenario`, including trace
+  replay) or an explicit ``alive=``; it is *observed* by the wrapped
+  :class:`~repro.core.resilience.ResilienceSession` first, so persistent
+  stragglers that would orphan a tree level trigger the elastic
+  re-assignment machinery before any compaction runs against them.
+* ``solve()`` runs weighted k-median (or k-means) over the tree frontier —
+  the b-recovered, straggler-proof summary of everything ingested — and
+  refreshes the serving model.
+* ``query(points)`` answers nearest-center / membership queries through
+  the compiled batched path (:class:`~repro.stream.query.QueryEngine`),
+  reporting a staleness bound per query.
+
+The recovery state is shared across ingests: every compaction's recovery
+solve goes through the resilience session's pattern-keyed cache, so a
+straggler pattern seen in round 3 costs zero host solves when it recurs in
+round 300.
+
+Env knobs (defaults for unset constructor args):
+``REPRO_STREAM_LEAF_SIZE`` — raw points per leaf before compaction (512);
+``REPRO_STREAM_FANOUT`` — buckets merged per level compaction (4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import kmeans
+from ..core.assignment import make_assignment
+from ..core.executor import Executor
+from ..core.resilience import ElasticPolicy, ResilienceSession
+from ..core.stragglers import StragglerScenario
+from .buffer import StreamBuffer
+from .query import QueryEngine, QueryResult, _bucket_size
+
+__all__ = ["StreamingSession", "StreamSolveResult"]
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return max(1, int(os.environ.get(name, str(default))))
+    except ValueError:
+        return default
+
+
+@dataclasses.dataclass
+class StreamSolveResult:
+    centers: np.ndarray   # (k, d)
+    cost: float           # weighted clustering cost over the frontier
+    frontier_size: int    # rows the coordinator solved over (pre-padding)
+    version: int          # serving-model version (monotonic)
+
+
+class StreamingSession:
+    """Streaming resilient clustering over redundantly-compacted coresets."""
+
+    def __init__(
+        self,
+        d: int,
+        k: int,
+        *,
+        num_nodes: int = 8,
+        scheme: str = "fractional_repetition",
+        ell: int = 2,
+        leaf_size: Optional[int] = None,
+        fanout: Optional[int] = None,
+        coreset_size: Optional[int] = None,
+        scenario: Optional[StragglerScenario] = None,
+        executor: Union[None, str, Executor] = None,
+        elastic: Optional[ElasticPolicy] = None,
+        recovery_method: str = "auto",
+        squared: bool = False,
+        impl: str = "auto",
+        seed: int = 0,
+        solve_iters: int = 20,
+    ):
+        self.d, self.k = int(d), int(k)
+        leaf_size = leaf_size or _env_int("REPRO_STREAM_LEAF_SIZE", 512)
+        fanout = fanout or _env_int("REPRO_STREAM_FANOUT", 4)
+        coreset_size = coreset_size or max(self.k + 1, leaf_size // 4)
+        if scenario is not None and scenario.num_nodes != num_nodes:
+            raise ValueError(
+                f"scenario has {scenario.num_nodes} nodes, session has {num_nodes}"
+            )
+        # The bucket→node placement: every level's fanout-sized compaction
+        # group is a shard set of this assignment.  Fractional repetition is
+        # the default because its replica groups are disjoint per bucket —
+        # recovery is EXACT (δ = 0) for every coverage-preserving pattern, so
+        # the tree is bit-stable under straggling; cyclic/bernoulli degrade
+        # gracefully within the Lemma-3 (1+δ) band instead.
+        assignment = make_assignment(scheme, fanout, num_nodes, ell=ell)
+        self.resilience = ResilienceSession(
+            assignment,
+            recovery_method=recovery_method,
+            executor=executor,
+            elastic=elastic if elastic is not None else ElasticPolicy(
+                enabled=True, patience=2
+            ),
+        )
+        self.buffer = StreamBuffer(
+            d, k,
+            session=self.resilience,
+            leaf_size=leaf_size,
+            coreset_size=coreset_size,
+            squared=squared,
+            impl=impl,
+            seed=seed,
+        )
+        self.scenario = scenario
+        self.query_engine = QueryEngine(impl=impl)
+        self.squared = bool(squared)
+        self.impl = impl
+        self.seed = int(seed)
+        self.solve_iters = int(solve_iters)
+        self._centers: Optional[np.ndarray] = None
+        self._version = 0
+        self._ingested = 0
+        self._ingests = 0
+        self._points_at_solve = 0
+        self._ingests_at_solve = 0
+
+    # ------------------------------------------------------------- ingest
+
+    def ingest(self, batch, alive: Optional[np.ndarray] = None) -> dict:
+        """Feed one arriving batch; returns a per-round report.
+
+        The round's straggler mask is ``alive`` if given, else the next step
+        of the attached scenario, else all-alive.  The resilience session
+        observes the step first (streaks, coverage accounting, elastic
+        re-assignment of at-risk buckets), then the tree compacts under it.
+        """
+        batch = np.asarray(batch, dtype=np.float32)
+        if alive is not None:
+            step = np.asarray(alive, dtype=bool)
+        elif self.scenario is not None:
+            try:
+                step = next(self.scenario)
+            except StopIteration:
+                # A finite scenario (TraceScenario(loop=False)) ran out; a
+                # bare StopIteration would surface as an unrelated
+                # RuntimeError inside generator-driven ingest loops (PEP 479).
+                raise ValueError(
+                    f"straggler scenario exhausted after {self._ingests} "
+                    "ingests — pass alive= explicitly or use loop=True"
+                ) from None
+        else:
+            step = np.ones(self.resilience.num_nodes, dtype=bool)
+        event = self.resilience.observe(step)
+        mask = np.asarray(getattr(step, "alive", step), dtype=bool)
+        report = self.buffer.add_batch(batch, mask)
+        self._ingested += len(batch)
+        self._ingests += 1
+        report["alive"] = mask
+        report["elastic"] = event
+        return report
+
+    # -------------------------------------------------------------- solve
+
+    def frontier(self) -> tuple[np.ndarray, np.ndarray]:
+        """(points, weights) — the tree's current recovered summary."""
+        return self.buffer.frontier()
+
+    def _solve_frontier(self, key, x, w, iters: int):
+        """Weighted coordinator solve, shape-bucketed: the frontier is padded
+        to a power-of-two row count (weight-0 rows are inert in every
+        weighted statistic) so repeated solves over a growing tree reuse a
+        handful of compiled programs instead of recompiling per size."""
+        n = x.shape[0]
+        nb = _bucket_size(n)
+        xp = np.zeros((nb, self.d), np.float32)
+        wp = np.zeros((nb,), np.float32)
+        xp[:n], wp[:n] = x, w
+        return kmeans.lloyd(
+            key, jnp.asarray(xp), self.k, weights=jnp.asarray(wp),
+            iters=iters, median=not self.squared, impl=self.impl,
+        )
+
+    def solve(self, *, iters: Optional[int] = None, seed: Optional[int] = None) -> StreamSolveResult:
+        """Resilient k-median (``squared=False``) / k-means over the frontier;
+        refreshes the serving centers and resets the staleness clock."""
+        x, w = self.frontier()
+        if x.shape[0] == 0:
+            raise ValueError("nothing ingested yet — solve() needs data")
+        res = self._solve_frontier(
+            jax.random.PRNGKey(self.seed if seed is None else seed),
+            x, w, self.solve_iters if iters is None else int(iters),
+        )
+        self._centers = np.asarray(res.centers)
+        self._version += 1
+        self._points_at_solve = self._ingested
+        self._ingests_at_solve = self._ingests
+        return StreamSolveResult(
+            centers=self._centers,
+            cost=float(res.cost),
+            frontier_size=int(x.shape[0]),
+            version=self._version,
+        )
+
+    def solve_pca(self, r: int) -> np.ndarray:
+        """Top-r right singular basis of the weighted frontier (√w-scaled
+        rows, the Lemma-5 weighting) — streaming Algorithm-3 analogue."""
+        x, w = self.frontier()
+        if x.shape[0] == 0:
+            raise ValueError("nothing ingested yet — solve_pca() needs data")
+        scaled = jnp.sqrt(jnp.maximum(jnp.asarray(w), 0.0))[:, None] * jnp.asarray(x)
+        _, _, vt = jnp.linalg.svd(scaled, full_matrices=False)
+        return np.asarray(vt[:r].T)  # (d, r)
+
+    # -------------------------------------------------------------- serve
+
+    @property
+    def centers(self) -> Optional[np.ndarray]:
+        return self._centers
+
+    @property
+    def staleness(self) -> dict:
+        """Ingestion that the current serving model has not seen."""
+        return {
+            "points": self._ingested - self._points_at_solve,
+            "ingests": self._ingests - self._ingests_at_solve,
+            "version": self._version,
+        }
+
+    def query(self, queries) -> QueryResult:
+        """Nearest-center / membership answers with a staleness bound.
+        Solves once automatically if no model exists yet."""
+        if self._centers is None:
+            self.solve()
+        return self.query_engine.assign(
+            queries,
+            self._centers,
+            staleness_points=self._ingested - self._points_at_solve,
+            staleness_ingests=self._ingests - self._ingests_at_solve,
+            version=self._version,
+        )
+
+    # -------------------------------------------------------------- stats
+
+    @property
+    def stats(self) -> dict:
+        """One flat view over tree, recovery, and serving counters."""
+        buf = self.buffer
+        return {
+            "ingested_points": self._ingested,
+            "ingest_calls": self._ingests,
+            "leaf_compactions": buf.leaf_compactions,
+            "compactions": buf.compactions,
+            "blocking_compactions": buf.blocking_compactions,
+            "buckets": buf.num_buckets,
+            "levels": len(buf.levels),
+            "summary_points": buf.summary_points,
+            "queries_served": self.query_engine.queries_served,
+            "query_buckets_compiled": self.query_engine.compiled_buckets,
+            "model_version": self._version,
+            **{f"recovery_{k}": v for k, v in self.resilience.stats.as_dict().items()},
+        }

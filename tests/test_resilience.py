@@ -175,6 +175,71 @@ def test_scenario_factory_and_reset_replay():
         make_scenario("lunch-break", 6)
 
 
+# ------------------------------------------------ scenario: trace replay
+
+
+def test_trace_scenario_roundtrip_reset_and_loop(tmp_path):
+    from repro.core import TraceScenario, make_scenario, record_trace
+
+    path = str(tmp_path / "trace.jsonl")
+    src = make_scenario("deadline", 5, seed=3, p_spike=0.3)
+    assert record_trace(src, 6, path) == 6
+    scen = make_scenario("trace", 5, path=path)
+    src.reset()
+    first = [next(scen) for _ in range(6)]
+    for got, want in zip(first, [next(src) for _ in range(6)]):
+        np.testing.assert_array_equal(got.alive, want.alive)
+        np.testing.assert_allclose(got.latencies, want.latencies)
+    # Infinite iterator: wraps around past the recorded rounds...
+    np.testing.assert_array_equal(next(scen).alive, first[0].alive)
+    assert next(scen).index == 7
+    # ...and reset() replays from step 0.
+    scen.reset()
+    again = [next(scen) for _ in range(6)]
+    for r1, r2 in zip(first, again):
+        np.testing.assert_array_equal(r1.alive, r2.alive)
+        assert r1.index == r2.index
+    # loop=False yields exactly the recorded rounds.
+    finite = TraceScenario(5, path, loop=False)
+    assert len(list(finite)) == 6
+    assert len(finite) == 6
+
+
+def test_trace_scenario_ignores_extra_row_keys(tmp_path):
+    """BENCH-row-style annotations (name/us_per_call/derived) ride along."""
+    from repro.core import TraceScenario
+
+    path = tmp_path / "annotated.jsonl"
+    path.write_text(
+        '{"name": "scen_cell", "us_per_call": 1.0, "derived": "x", "alive": [1, 0, 1]}\n'
+        '{"alive": [0, 1, 1], "index": 7}\n'
+    )
+    scen = TraceScenario(3, str(path))
+    np.testing.assert_array_equal(next(scen).alive, [True, False, True])
+    np.testing.assert_array_equal(next(scen).alive, [False, True, True])
+
+
+def test_trace_scenario_input_validation(tmp_path):
+    import pytest as _pytest
+
+    from repro.core import TraceScenario, make_scenario
+
+    bad_len = tmp_path / "bad_len.jsonl"
+    bad_len.write_text('{"alive": [1, 0]}\n')
+    with _pytest.raises(ValueError, match="entries"):
+        TraceScenario(3, str(bad_len))
+    no_alive = tmp_path / "no_alive.jsonl"
+    no_alive.write_text('{"latencies": [1.0]}\n')
+    with _pytest.raises(ValueError, match="'alive'"):
+        TraceScenario(1, str(no_alive))
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    with _pytest.raises(ValueError, match="empty trace"):
+        TraceScenario(1, str(empty))
+    with _pytest.raises(ValueError, match="path="):
+        make_scenario("trace", 3)
+
+
 # --------------------------------------------------- session: shared cache
 
 
@@ -191,6 +256,74 @@ def test_session_one_cache_across_algorithms_and_plan():
     sess.coreset(pts, 3, 16, alive)
     assert sess.stats.host_solves == 1  # one pattern, solved once, shared 4×
     assert sess.stats.cache_hits == 3
+
+
+def test_coverage_validation_computed_once_per_pattern():
+    """Satellite fix: the per-call shard-coverage re-validation in the
+    algorithm prelude is hoisted into the session and cached per pattern —
+    repeated streaming solves against a seen pattern skip the host-side
+    work.  ``SessionStats.coverage_checks`` counts actual computations."""
+    from repro.core import ResilienceSession, cyclic_assignment
+
+    pts = _pts(90)
+    a = cyclic_assignment(90, 6, 2)
+    alive = np.array([True, True, False, True, True, True])
+    sess = ResilienceSession(a)
+    sess.coreset(pts, 3, 8, alive)
+    sess.coreset(pts, 3, 8, alive)
+    sess.kmedian(pts, 3, alive, local_iters=2, coord_iters=2)
+    assert sess.stats.coverage_checks == 1  # one pattern → one validation
+    other = np.array([True, False, True, True, True, True])
+    sess.cost(pts, np.zeros((3, 3), np.float32), other)
+    assert sess.stats.coverage_checks == 2  # new pattern → one more
+    sess.coreset(pts, 3, 8, other)
+    assert sess.stats.coverage_checks == 2
+    # The all-dead guard still fires (now from the cached validation).
+    with pytest.raises(ValueError, match="no surviving"):
+        sess.prepare(pts, np.zeros(6, dtype=bool))
+
+
+def test_coverage_validation_invalidated_with_pattern_cache():
+    """An elastic patch drops exactly the coverage entries it can change —
+    the same rule as the recovery cache."""
+    from repro.core import ElasticPolicy, ResilienceSession, cyclic_assignment
+
+    sess = ResilienceSession(
+        cyclic_assignment(40, 8, 2), elastic=ElasticPolicy(enabled=True, patience=2)
+    )
+    dead_67 = np.ones(8, dtype=bool)
+    dead_67[[6, 7]] = False
+    uncovered_before = sess.validate_coverage(dead_67)
+    assert len(uncovered_before) > 0  # adjacent cyclic nodes → coverage lost
+    assert sess.stats.coverage_checks == 1
+    for _ in range(3):
+        sess.observe(dead_67)
+    assert sess.stats.elastic_patches >= 1
+    # The patch re-replicated the at-risk shards onto nodes alive in this
+    # pattern → the stale entry must be recomputed, and is now covered.
+    assert len(sess.validate_coverage(dead_67)) == 0
+    assert sess.stats.coverage_checks == 2
+
+
+def test_coverage_entry_from_caller_rec_also_invalidated():
+    """A coverage entry seeded via validate_coverage(alive, rec=...) never
+    touches the recovery cache — the patch sweep must still drop it (it is
+    keyed independently), or it would serve pre-patch uncovered ids."""
+    from repro.core import ElasticPolicy, ResilienceSession, cyclic_assignment
+    from repro.core.recovery import solve_recovery
+
+    a = cyclic_assignment(40, 8, 2)
+    sess = ResilienceSession(a, elastic=ElasticPolicy(enabled=True, patience=2))
+    dead = np.ones(8, dtype=bool)
+    dead[[6, 7]] = False
+    rec = solve_recovery(a, dead)  # host-side, bypasses sess._cache
+    assert len(sess.validate_coverage(dead, rec)) > 0
+    assert sess.stats.host_solves == 0  # cache really was bypassed
+    for _ in range(3):
+        sess.observe(dead)
+    assert sess.stats.elastic_patches >= 1
+    assert len(sess.validate_coverage(dead)) == 0  # recomputed post-patch
+    assert sess.stats.coverage_checks == 2
 
 
 def test_entry_points_without_session_unchanged():

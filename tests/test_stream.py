@@ -1,0 +1,404 @@
+"""Streaming-layer tests: merge-and-reduce tree mechanics, coreset
+composability (the invariant the tree rests on), straggler-proof
+compactions, the query path, and StreamingSession end-to-end — local
+in-process; the 8-device mesh run follows the repo's forced-host-device
+subprocess pattern.
+
+Shapes are shared across tests (d=2, s=6, fanout=3, leaf=64, m=16, k=3) so
+the executor singletons' jit caches amortize compiles across the module.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ResilienceSession,
+    fractional_repetition_assignment,
+    make_scenario,
+)
+from repro.stream import StreamBuffer, StreamingSession
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D, S, FANOUT, LEAF, M, K = 2, 6, 3, 64, 16, 3
+
+
+def _assignment():
+    # FR(3 buckets, 6 nodes, ell=2): bucket j lives on nodes {j, 3+j} —
+    # disjoint replica groups, δ = 0 for every coverage-preserving pattern.
+    return fractional_repetition_assignment(FANOUT, S, 2)
+
+
+def _buffer(seed=0, session=None):
+    session = session or ResilienceSession(_assignment())
+    return StreamBuffer(
+        D, K, session=session, leaf_size=LEAF, coreset_size=M, seed=seed
+    )
+
+
+def _batches(n_batches, batch=LEAF, seed=0, d=D):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(batch, d)).astype(np.float32) for _ in range(n_batches)]
+
+
+# ----------------------------------------------------------- tree mechanics
+
+
+def test_tree_structure_and_bounded_memory():
+    buf = _buffer()
+    for i, b in enumerate(_batches(12)):
+        buf.add_batch(b)
+        # Memory bound: every level holds < fanout buckets after cascading.
+        assert all(len(lv) < FANOUT for lv in buf.levels)
+        assert buf.summary_points == buf.num_buckets * M
+    # 12 leaves at fanout 3: 4 level-1 compactions, 1 level-2, 0+1+1 left.
+    assert buf.leaf_compactions == 12
+    assert buf.compactions == 5
+    assert [len(lv) for lv in buf.levels] == [0, 1, 1]
+    x, w = buf.frontier()
+    assert x.shape == (2 * M, D) and w.shape == (2 * M,)
+    assert float(w.sum()) == pytest.approx(12 * LEAF, rel=0.5)  # mass preserved
+
+
+def test_partial_batches_pop_exact_leaves():
+    buf = _buffer()
+    rng = np.random.default_rng(3)
+    fed = 0
+    for n in (10, 100, 7, 64, 30):  # deliberately misaligned with LEAF
+        buf.add_batch(rng.normal(size=(n, D)).astype(np.float32))
+        fed += n
+    assert buf.leaf_compactions == fed // LEAF
+    x, w = buf.frontier()
+    assert x.shape[0] == buf.summary_points + fed % LEAF  # pending rides along
+
+
+def test_tree_deterministic_given_inputs():
+    b1, b2 = _buffer(seed=5), _buffer(seed=5)
+    for b in _batches(7, seed=9):
+        b1.add_batch(b)
+        b2.add_batch(b)
+    x1, w1 = b1.frontier()
+    x2, w2 = b2.frontier()
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(w1, w2)
+
+
+def test_buffer_rejects_bad_shapes_and_sizes():
+    buf = _buffer()
+    with pytest.raises(ValueError, match="expected"):
+        buf.add_batch(np.zeros((4, D + 1), np.float32))
+    with pytest.raises(ValueError, match="coreset_size"):
+        StreamBuffer(
+            D, K, session=ResilienceSession(_assignment()),
+            leaf_size=8, coreset_size=9,
+        )
+
+
+# ------------------------------------------------- coreset composability
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_merge_of_coresets_matches_coreset_of_union(seed):
+    """Property (Feldman–Langberg): merge(coreset(P1), coreset(P2)) stays in
+    the ε cost band of coreset(P1 ∪ P2) — the merge-and-reduce invariant."""
+    from repro.core import clustering_cost, merge_coresets, sensitivity_coreset
+    from repro.data.synthetic import gaussian_mixture
+
+    rng = np.random.default_rng(seed)
+    p1, _, _ = gaussian_mixture(600, K, D, rng=rng)
+    p2, _, _ = gaussian_mixture(600, K, D, box=2.0, rng=rng)
+    union = jnp.asarray(np.concatenate([p1, p2]))
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    merged = merge_coresets(
+        sensitivity_coreset(k1, jnp.asarray(p1), k=K, m=200),
+        sensitivity_coreset(k2, jnp.asarray(p2), k=K, m=200),
+    )
+    direct = sensitivity_coreset(k3, union, k=K, m=400)
+    for i in range(3):
+        C = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+        full = float(clustering_cost(union, C))
+        via_merge = float(clustering_cost(merged.points, C, weights=merged.weights))
+        via_direct = float(clustering_cost(direct.points, C, weights=direct.weights))
+        assert abs(via_merge - full) / full < 0.35, (seed, i)
+        assert abs(via_direct - full) / full < 0.35, (seed, i)
+        assert abs(via_merge - via_direct) / full < 0.6, (seed, i)
+
+
+# ------------------------------------------- straggler-proof compactions
+
+
+def test_straggler_during_compaction_parity():
+    """A compaction under a coverage-preserving straggler pattern must yield
+    the SAME tree as the no-straggler run (δ = 0 recovery + replicated
+    reduce) — the ISSUE's dropped-bucket ↔ recovered-tree parity at 1e-5."""
+    ref, hit = _buffer(seed=1), _buffer(seed=1)
+    dead = np.ones(S, dtype=bool)
+    dead[2] = False  # FR ell=2: bucket 2 keeps its node-5 replica
+    for i, b in enumerate(_batches(9, seed=4)):
+        ref.add_batch(b)  # all alive
+        hit.add_batch(b, dead)
+    assert hit.compactions == ref.compactions == 4
+    assert hit.blocking_compactions == 0
+    xr, wr = ref.frontier()
+    xh, wh = hit.frontier()
+    np.testing.assert_allclose(xh, xr, atol=1e-5)
+    np.testing.assert_allclose(wh, wr, atol=1e-5)
+
+
+def test_orphaning_pattern_blocks_instead_of_losing_level():
+    """A mask killing BOTH replicas of a bucket (nodes 0 and 3 hold bucket 0
+    under FR ell=2) must fall back to the all-alive recovery — counted, and
+    with zero effect on the tree contents."""
+    ref, hit = _buffer(seed=2), _buffer(seed=2)
+    dead = np.ones(S, dtype=bool)
+    dead[[0, 3]] = False
+    for b in _batches(6, seed=8):
+        ref.add_batch(b)
+        hit.add_batch(b, dead)
+    assert hit.compactions == ref.compactions == 2  # zero levels lost
+    assert hit.blocking_compactions == 2
+    xr, _ = ref.frontier()
+    xh, _ = hit.frontier()
+    np.testing.assert_allclose(xh, xr, atol=1e-5)
+    # The blocking path solves (and caches) the all-alive pattern once.
+    assert hit.session.stats.host_solves == 2  # dead pattern + all-alive
+
+
+def test_all_dead_round_blocks():
+    buf = _buffer(seed=3)
+    for b in _batches(3, seed=2):
+        buf.add_batch(b, np.zeros(S, dtype=bool))
+    assert buf.compactions == 1
+    assert buf.blocking_compactions == 1
+
+
+# ------------------------------------------------------------- query path
+
+
+def test_query_engine_matches_direct_assign_and_buckets_shapes():
+    from repro.kernels.pairwise_dist import ops as pd
+    from repro.stream.query import QueryEngine
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(K, D)).astype(np.float32)
+    engine = QueryEngine()
+    q = rng.normal(size=(37, D)).astype(np.float32)
+    res = engine.assign(q, centers, staleness_points=11, version=2)
+    idx, d2 = pd.assign_min(jnp.asarray(q), jnp.asarray(centers))
+    np.testing.assert_array_equal(res.indices, np.asarray(idx))
+    np.testing.assert_allclose(
+        res.distances, np.sqrt(np.maximum(np.asarray(d2), 0)), rtol=1e-5, atol=1e-6
+    )
+    assert res.staleness_points == 11 and res.version == 2
+    assert engine.compiled_buckets == 1
+    engine.assign(rng.normal(size=(5, D)).astype(np.float32), centers)
+    assert engine.compiled_buckets == 1  # 5 and 37 share the 64-bucket
+    engine.assign(rng.normal(size=(65, D)).astype(np.float32), centers)
+    assert engine.compiled_buckets == 2  # 65 → the 128 bucket
+    one = engine.assign(np.zeros(D, np.float32), centers)  # 1-D query point
+    assert one.indices.shape == (1,)
+    empty = engine.assign(np.zeros((0, D), np.float32), centers)
+    assert empty.indices.shape == (0,)
+    assert engine.queries_served == 37 + 5 + 65 + 1
+
+
+def test_session_query_staleness_and_autosolve():
+    sess = StreamingSession(
+        D, K, num_nodes=S, fanout=FANOUT, leaf_size=LEAF, coreset_size=M, seed=0
+    )
+    with pytest.raises(ValueError, match="nothing ingested"):
+        sess.solve()
+    sess.ingest(_batches(1, batch=2 * LEAF)[0])
+    res = sess.query(np.zeros((4, D), np.float32))  # auto-solves first
+    assert res.version == 1 and res.staleness_points == 0
+    sess.ingest(_batches(1, batch=30, seed=1)[0])
+    res = sess.query(np.zeros((4, D), np.float32))
+    assert res.staleness_points == 30 and res.staleness_ingests == 1
+    assert sess.staleness["points"] == 30
+    sess.solve()
+    assert sess.staleness["points"] == 0 and sess.staleness["version"] == 2
+
+
+# -------------------------------------------------- session end-to-end
+
+
+def test_streaming_session_end_to_end_local():
+    """≥8 ingests under iid stragglers: solve parity with the no-straggler
+    reference at 1e-5, zero levels lost, and zero NEW host solves once the
+    pattern stream repeats (scenario reset → replay)."""
+    batches = _batches(8, batch=3 * LEAF, seed=6)  # every ingest compacts
+    scen = make_scenario("iid", S, p_straggler=0.25, seed=11)
+
+    def fresh(scenario):
+        from repro.core import ElasticPolicy
+
+        return StreamingSession(
+            D, K, num_nodes=S, fanout=FANOUT, leaf_size=LEAF, coreset_size=M,
+            scenario=scenario, seed=0, elastic=ElasticPolicy(enabled=False),
+        )
+
+    sess = fresh(scen)
+    straggled = 0
+    for b in batches:
+        rep = sess.ingest(b)
+        straggled += int((~rep["alive"]).sum())
+    assert straggled > 0, "scenario never straggled — test is vacuous"
+    ref = fresh(None)
+    for b in batches:
+        ref.ingest(b)
+    cost = sess.solve(iters=8).cost
+    ref_cost = ref.solve(iters=8).cost
+    assert cost == pytest.approx(ref_cost, rel=1e-5)
+    # Zero tree levels lost: bucket-for-bucket identical to the reference.
+    assert [len(lv) for lv in sess.buffer.levels] == [
+        len(lv) for lv in ref.buffer.levels
+    ]
+    xs, ws = sess.frontier()
+    xr, wr = ref.frontier()
+    np.testing.assert_allclose(xs, xr, atol=1e-5)
+    np.testing.assert_allclose(ws, wr, atol=1e-5)
+    # Pattern-keyed recovery cache across ingests: replaying the SAME mask
+    # stream over fresh data costs zero additional host solves.
+    before = sess.resilience.stats.host_solves
+    assert before > 0
+    scen.reset()
+    for b in _batches(8, batch=3 * LEAF, seed=7):
+        sess.ingest(b)
+    assert sess.resilience.stats.host_solves == before
+    assert sess.resilience.stats.cache_hits > 0
+
+
+def test_streaming_session_mesh_single_device_matches_local():
+    scen_kw = dict(p_straggler=0.2, seed=3)
+    costs = []
+    for ex in (None, "mesh"):
+        sess = StreamingSession(
+            D, K, num_nodes=S, fanout=FANOUT, leaf_size=LEAF, coreset_size=M,
+            scenario=make_scenario("iid", S, **scen_kw), executor=ex, seed=0,
+        )
+        for b in _batches(5, batch=2 * LEAF, seed=12):
+            sess.ingest(b)
+        costs.append(sess.solve(iters=6).cost)
+    assert costs[1] == pytest.approx(costs[0], rel=1e-5)
+
+
+def test_session_scenario_node_count_mismatch_raises():
+    with pytest.raises(ValueError, match="nodes"):
+        StreamingSession(D, K, num_nodes=S, scenario=make_scenario("iid", S + 1))
+
+
+def test_env_var_defaults(monkeypatch):
+    monkeypatch.setenv("REPRO_STREAM_LEAF_SIZE", "96")
+    monkeypatch.setenv("REPRO_STREAM_FANOUT", "5")
+    sess = StreamingSession(D, K, num_nodes=S)
+    assert sess.buffer.leaf_size == 96
+    assert sess.buffer.fanout == 5
+    assert sess.resilience.assignment.num_shards == 5
+
+
+def test_solve_pca_tracks_frontier_subspace():
+    rng = np.random.default_rng(0)
+    basis_true = np.linalg.qr(rng.normal(size=(4, 1)))[0]  # 1-D subspace in R⁴
+    sess = StreamingSession(
+        4, 2, num_nodes=S, fanout=FANOUT, leaf_size=LEAF, coreset_size=M, seed=0
+    )
+    for _ in range(4):
+        z = rng.normal(size=(LEAF, 1)).astype(np.float32)
+        sess.ingest((z @ basis_true.T + 0.01 * rng.normal(size=(LEAF, 4))).astype(np.float32))
+    v = sess.solve_pca(1)
+    cos = abs(float(v[:, 0] @ basis_true[:, 0]))
+    assert cos > 0.99
+
+
+# --------------------------------------- multi-device mesh run (subprocess)
+
+
+def test_streaming_session_mesh_8_devices_end_to_end():
+    """Acceptance: 8 ingests under iid stragglers on a FORCED 8-host-device
+    mesh — local↔mesh↔no-straggler parity at 1e-5, zero levels lost, zero
+    new host solves after the mask stream repeats."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        assert jax.device_count() == 8
+        from repro.core import ElasticPolicy, make_scenario
+        from repro.stream import StreamingSession
+
+        rng = np.random.default_rng(0)
+        batches = [rng.normal(size=(192, 2)).astype(np.float32) for _ in range(8)]
+
+        def run(executor, scenario):
+            sess = StreamingSession(
+                2, 3, num_nodes=8, fanout=3, leaf_size=64, coreset_size=16,
+                scenario=scenario, executor=executor, seed=0,
+                elastic=ElasticPolicy(enabled=False))
+            for b in batches:
+                sess.ingest(b)
+            return sess
+
+        scen = lambda: make_scenario("iid", 8, p_straggler=0.2, seed=5)
+        sl, sm, ref = run("local", scen()), run("mesh", scen()), run("local", None)
+        cl, cm, cr = (s.solve(iters=8).cost for s in (sl, sm, ref))
+        assert abs(cl / cr - 1) <= 1e-5, (cl, cr)
+        assert abs(cm / cr - 1) <= 1e-5, (cm, cr)
+        for s in (sl, sm):
+            assert [len(lv) for lv in s.buffer.levels] == [
+                len(lv) for lv in ref.buffer.levels]       # zero levels lost
+            xs, ws = s.frontier(); xr, wr = ref.frontier()
+            assert np.allclose(xs, xr, atol=1e-5) and np.allclose(ws, wr, atol=1e-5)
+        before = sm.resilience.stats.host_solves
+        assert before > 0
+        sm.scenario.reset()                                 # replay the masks
+        for b in batches:
+            sm.ingest(b)
+        assert sm.resilience.stats.host_solves == before, "repeat pattern re-solved"
+        print("STREAM_MESH_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=540, env=env,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "STREAM_MESH_OK" in out.stdout
+
+
+# ------------------------------------------------------------ bench smoke
+
+
+def test_bench_stream_emits_required_fields():
+    sys.path.insert(0, _REPO)
+    try:
+        from benchmarks import common
+        from benchmarks.bench_stream import run as bench_run
+
+        mark = len(common.ROWS)
+        bench_run(
+            n_batches=4, batch=LEAF, d=D, k=K, s=S, leaf=LEAF, m=M,
+            fanout=FANOUT, query_batch=LEAF, query_calls=3,
+            executors=("local",),
+        )
+        rows = common.ROWS[mark:]
+    finally:
+        sys.path.pop(0)
+    cells = [r for r in rows if r[0].startswith("stream_") and "rows_s=" in r[2]]
+    assert len(cells) == 3  # iid / deadline / trace
+    for name, us, derived in cells:
+        for field in ("rows_s=", "compactions_per_ingest=", "q_p50_us=", "q_p99_us="):
+            assert field in derived, (name, derived)
+        assert us > 0
+    dev = [r for r in rows if r[0] == "stream_devices"]
+    assert dev and "query_impl=" in dev[0][2]
+    assert "interpret" not in dev[0][2]  # compiled path only
