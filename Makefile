@@ -5,13 +5,16 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all docs-check bench-kernels bench-scenarios bench-stream bench
+.PHONY: test test-all test-cov docs-check bench-kernels bench-scenarios bench-stream bench-train bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: docs-check bench-scenarios bench-stream  ## everything, including compile-heavy slow-marked smoke tests
+test-all: docs-check bench-scenarios bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
+
+test-cov:  ## tier-1 under pytest-cov; floor gated on core/ + train/ (REPRO_COV_FLOOR; skips loudly if pytest-cov missing)
+	timeout 600 $(PY) tools/check_cov.py
 
 docs-check:  ## markdown link lint + the quickstart/streaming examples must run end to end
 	$(PY) tools/check_docs.py
@@ -26,6 +29,9 @@ bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executo
 
 bench-stream:  ## streaming-layer sweep (ingest rows/s, query p50/p99, compactions) → BENCH_stream.json
 	timeout 300 $(PY) -m benchmarks.run stream --emit BENCH_stream.json
+
+bench-train:  ## mesh-native resilient-training sweep (scheme × scenario × executor) → BENCH_train.json
+	timeout 420 $(PY) -m benchmarks.run train_resilience --emit BENCH_train.json
 
 bench:  ## full benchmark sweep
 	$(PY) -m benchmarks.run

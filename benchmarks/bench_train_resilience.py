@@ -1,0 +1,141 @@
+"""Scheme × scenario × executor sweep of MESH-NATIVE resilient training.
+
+Each cell drives one :class:`repro.train.trainer.Trainer` in
+``device_recovery`` mode for ``steps`` steps of a straggler scenario: the
+recovery solve (PGD over the runtime alive mask) runs INSIDE the compiled
+train step, resident group token blocks live on the executor, and the
+session's elastic policy re-places only moved blocks on patches.  Derived
+fields per row:
+
+* ``loss`` — final-step recovered training loss;
+* ``host_solves`` / ``device_solves`` — re-solve counters (the fused path
+  host-solves only on degenerate uncovered-shard patterns);
+* ``fallbacks`` — steps that took the host best-effort path;
+* ``patches`` / ``moved_blocks`` / ``full_repacks`` — elastic data movement;
+* ``us_per_call`` — mean wall-clock per post-warmup step.
+
+A final ``train_parity_fr_*`` row re-runs the FR cell against a fixed
+coverage-preserving pattern and reports the max parameter divergence from
+the no-straggler run — the δ = 0 exactness claim as a monitored number.
+
+    python -m benchmarks.run train_resilience --emit BENCH_train.json
+    make bench-train
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.qwen3_4b import smoke_config
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+from .common import emit
+
+SCHEMES = ("singleton", "cyclic", "fr")
+SCENARIOS = ("fixed", "deadline")
+
+
+def _trace(rows) -> str:
+    fd, path = tempfile.mkstemp(suffix=".jsonl", prefix="bench_train_")
+    with os.fdopen(fd, "w") as f:
+        for r in rows:
+            f.write(json.dumps({"alive": list(map(int, r))}) + "\n")
+    return path
+
+
+def _trainer(cfg, scheme, scenario, executor, steps, seed, *, patience=3, **scen_kw):
+    tc = TrainerConfig(
+        num_groups=4, num_shards=4,
+        redundancy=1 if scheme == "singleton" else 2,
+        scheme=scheme, microbatch=1, seq_len=32, steps=steps, seed=seed,
+        simulate_stragglers=True, straggler_scenario=scenario,
+        scenario_kwargs=scen_kw or None, straggler_deadline=1.8,
+        device_recovery=True, executor=executor, resident_steps=2,
+        elastic_patience=patience,
+    )
+    return Trainer(cfg, tc, AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=steps))
+
+
+def run(
+    steps: int = 6,
+    seed: int = 0,
+    executors: tuple[str, ...] = ("local",),
+) -> None:
+    cfg = smoke_config().validate()
+    emit("train_devices", 0.0, f"devices={jax.device_count()} steps={steps}")
+    for scheme in SCHEMES:
+        for scen in SCENARIOS:
+            for ex in executors:
+                kw = {"t": 1} if scen == "fixed" else {}
+                t = _trainer(cfg, scheme, scen, ex, steps, seed, **kw)
+                state, _ = t.init_state()
+                # Warmup step 0 (compile), then time the steady state.
+                t.tcfg.steps = 1
+                state = t.run(state, start_step=0)
+                t.tcfg.steps = steps
+                t0 = time.perf_counter()
+                state = t.run(state, start_step=1)
+                us = (time.perf_counter() - t0) / max(1, steps - 1) * 1e6
+                s = t.plan.session.stats
+                losses = [h["loss"] for h in t.history if "loss" in h]
+                fallbacks = sum(bool(h.get("fallback")) for h in t.history)
+                emit(
+                    f"train_{scheme}_{scen}_{ex}",
+                    us,
+                    f"loss={losses[-1]:.3f} host_solves={s.host_solves} "
+                    f"device_solves={s.device_solves} fallbacks={fallbacks} "
+                    f"patches={s.elastic_patches} moved_blocks={s.moved_node_blocks} "
+                    f"full_repacks={s.full_repacks}",
+                )
+    # δ = 0 parity monitor: FR under a fixed coverage-preserving pattern must
+    # track the clean run's parameters.
+    for ex in executors:
+        clean = _trace([[1, 1, 1, 1]] * steps)
+        strag = _trace([[1, 0, 1, 1]] * steps)
+        try:
+            # patience=0: the monitor isolates δ = 0 exactness — an elastic
+            # patch mid-run changes b legitimately and would mask it.
+            t0 = _trainer(cfg, "fr", "trace", ex, steps, seed, patience=0, path=clean)
+            s0 = t0.run()
+            t1 = _trainer(cfg, "fr", "trace", ex, steps, seed, patience=0, path=strag)
+            s1 = t1.run()
+        finally:
+            os.unlink(clean)
+            os.unlink(strag)
+        diffs = [
+            float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(s0.params), jax.tree_util.tree_leaves(s1.params)
+            )
+        ]
+        emit(
+            f"train_parity_fr_{ex}",
+            0.0,
+            f"max_param_diff={max(diffs):.2e} "
+            f"host_solves={t1.plan.session.stats.host_solves} "
+            f"device_solves={t1.plan.session.stats.device_solves}",
+        )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--executor", choices=("local", "mesh", "both"), default="local")
+    args = ap.parse_args()
+    executors = ("local", "mesh") if args.executor == "both" else (args.executor,)
+    print("name,us_per_call,derived")
+    run(steps=args.steps, seed=args.seed, executors=executors)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ from . import (
     bench_kernels,
     bench_scenarios,
     bench_stream,
+    bench_train_resilience,
     bench_training,
 )
 from .common import emit
@@ -36,6 +37,7 @@ BENCHES = {
     "kernels": bench_kernels.run,
     "scenarios": bench_scenarios.run,
     "stream": bench_stream.run,
+    "train_resilience": bench_train_resilience.run,
 }
 
 

@@ -38,12 +38,23 @@ from .recovery import jax_recovery_masked
 __all__ = ["Executor", "LocalExecutor", "get_executor"]
 
 
+def _as_jax_tree(a):
+    """Coerce one argument — an array OR an arbitrary pytree of arrays (a
+    params dict, a grad tree) — to jax arrays leaf-wise."""
+    return jax.tree_util.tree_map(jnp.asarray, a)
+
+
 class Executor:
     """Protocol: map an independent per-node function over node-stacked data.
 
     ``node_args`` are arrays with a leading node axis (one slice per node,
     e.g. the padded shards from ``pack_local_shards``); ``broadcast_args``
-    are shared by every node (e.g. a candidate center set).
+    are shared by every node (e.g. a candidate center set — or a whole
+    params pytree: broadcast arguments and ``fn`` outputs may be arbitrary
+    pytrees, which is what lets a training step route its per-group gradient
+    trees through the same Lemma-3 combine as the clustering scalars).
+    Node-stacked arguments must be plain arrays (they are padded and sliced
+    along the node axis).
     """
 
     name = "abstract"
@@ -140,7 +151,7 @@ class LocalExecutor(Executor):
 
     def map_nodes(self, fn, node_args, broadcast_args=()):
         node_args = tuple(jnp.asarray(a) for a in node_args)
-        broadcast_args = tuple(jnp.asarray(a) for a in broadcast_args)
+        broadcast_args = tuple(_as_jax_tree(a) for a in broadcast_args)
         return self._compiled(fn, len(node_args), len(broadcast_args))(
             *node_args, *broadcast_args
         )
@@ -167,7 +178,7 @@ class LocalExecutor(Executor):
         self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300
     ):
         node_args = tuple(jnp.asarray(a) for a in node_args)
-        broadcast_args = tuple(jnp.asarray(a) for a in broadcast_args)
+        broadcast_args = tuple(_as_jax_tree(a) for a in broadcast_args)
         return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
             jnp.asarray(A, jnp.float32), jnp.asarray(alive, bool),
             *node_args, *broadcast_args,
@@ -177,7 +188,7 @@ class LocalExecutor(Executor):
         key = ("replicated", fn)
         if key not in self._jitted:
             self._jitted[key] = jax.jit(fn)
-        return self._jitted[key](*(jnp.asarray(a) for a in args))
+        return self._jitted[key](*(_as_jax_tree(a) for a in args))
 
     def update_node_rows(self, arr, rows, new_rows):
         idx = jnp.asarray(list(rows), jnp.int32)

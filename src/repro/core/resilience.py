@@ -79,6 +79,8 @@ class SessionStats:
     coverage_checks: int = 0   # per-pattern coverage validations COMPUTED
     elastic_patches: int = 0   # assignment patches applied
     moved_node_blocks: int = 0 # node rows re-placed incrementally
+    full_repacks: int = 0      # patches that forced a FULL re-place (capacity
+                               # overflow) instead of moved-rows-only surgery
     cache_invalidations: int = 0  # entries dropped by patches
     rounds: int = 0            # observe() calls
     uncovered_rounds: int = 0  # rounds where some shard had no alive replica
@@ -117,7 +119,17 @@ class ResilienceSession:
         # (has_surviving_data, uncovered shard ids).  Same invalidation rule
         # as the recovery cache.
         self._coverage: dict[bytes, tuple[bool, np.ndarray]] = {}
+        # Boolean coverage predicate cache (pattern_covers): solve-free, so
+        # it is keyed and invalidated like _coverage but seeded on its own.
+        self._covers: dict[bytes, bool] = {}
         self._streak = np.zeros(assignment.num_nodes, dtype=np.int64)
+        # Patch listeners: consumers that keep their OWN device-resident
+        # node-stacked state (the trainer's token blocks, a streaming
+        # bucket store) register a callback(moved_nodes, old_m, new_m) and
+        # re-place just the moved rows when the session patches the
+        # assignment — the same incremental discipline as _replace_moved_blocks
+        # without the session having to know every consumer's data layout.
+        self._patch_listeners: list = []
         # Host-side packed shards, keyed by the caller's points object.
         self._pack_src = None
         self._pack_fp: Optional[bytes] = None
@@ -161,6 +173,29 @@ class ResilienceSession:
         """(s,) float32 b_full (zeros at stragglers) + diagnostics."""
         res = self.recovery(alive)
         return res.b_full.astype(np.float32), res
+
+    def pattern_covers(self, alive: np.ndarray) -> bool:
+        """True iff every shard keeps ≥ 1 alive replica under ``alive`` —
+        the routing predicate between the on-device solver (which masks
+        uncovered shards out of its objective, silently dropping their
+        mass) and the host best-effort path (which reports them).  One
+        definition for every consumer (plan.step_weights, the trainer's
+        fused step) so the routing can never drift.
+
+        Cached per pattern with the same invalidation rule as the recovery
+        cache (an elastic patch with a patched node alive in the pattern
+        drops the entry).  Unlike :meth:`validate_coverage` it never needs
+        a recovery solve to seed — the hot path stays at zero host solves.
+        """
+        alive = np.asarray(alive, dtype=bool)
+        key = alive.tobytes()
+        hit = self._covers.get(key)
+        if hit is None:
+            hit = bool(alive.any()) and not (
+                self.assignment.matrix[alive].sum(axis=0) == 0
+            ).any()
+            self._covers[key] = hit
+        return hit
 
     def validate_coverage(
         self, alive: np.ndarray, rec: Optional[RecoveryResult] = None
@@ -405,7 +440,18 @@ class ResilienceSession:
         self.stats.elastic_patches += 1
         self.version += 1
         self._replace_moved_blocks(sorted(moved), old_m)
+        new_m = int(self.assignment.matrix.sum(axis=1).max())
+        for cb in self._patch_listeners:
+            cb(sorted(moved), old_m, new_m)
         return sorted(moved)
+
+    def add_patch_listener(self, cb) -> None:
+        """Register ``cb(moved_nodes, old_max_load, new_max_load)`` to fire
+        after every elastic patch (assignment already swapped, caches already
+        invalidated).  Consumers holding device-resident node-stacked state
+        use this to re-place only the moved node rows
+        (``Executor.update_node_rows``)."""
+        self._patch_listeners.append(cb)
 
     def _invalidate_patterns(self, moved_nodes: list[int]) -> None:
         """Drop ONLY the cache entries the patch can change.
@@ -427,6 +473,9 @@ class ResilienceSession:
         for key in list(self._coverage):
             if np.frombuffer(key, dtype=bool)[moved].any():
                 del self._coverage[key]
+        for key in list(self._covers):
+            if np.frombuffer(key, dtype=bool)[moved].any():
+                del self._covers[key]
 
     def _replace_moved_blocks(self, moved_nodes: list[int], old_m: int) -> None:
         """Incrementally refresh the device-resident packed shards: only the

@@ -34,11 +34,15 @@ class RedundantDataPipeline:
         self._group_shards = [
             self.plan.group_shards(g) for g in range(self.plan.num_groups)
         ]
+        # Snapshot the uniform load ONCE: batch shapes are static for the
+        # run, so a later elastic patch (which unbalances the plan and makes
+        # plan.shards_per_group raise) must not change them.
+        self._shards_per_group = self.plan.shards_per_group
 
     @property
     def batch_shape(self) -> tuple[int, int]:
         G = self.plan.num_groups
-        L = self.plan.shards_per_group
+        L = self._shards_per_group
         return (G * L * self.microbatch, self.seq_len)
 
     def batch(self, step: int) -> np.ndarray:
@@ -52,6 +56,32 @@ class RedundantDataPipeline:
             ]
             groups.append(np.concatenate(parts, axis=0))
         return np.concatenate(groups, axis=0)
+
+    def shard_rows(
+        self, shard_ids, step: int, capacity: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Capacity-padded token rows for ONE group: ``(capacity·mb, T)``
+        int32 tokens and a ``(capacity,)`` float32 shard-slot validity mask.
+
+        The mesh-native trainer keeps these blocks device-resident (one row
+        per group, node-stacked) and re-packs only moved groups after an
+        elastic patch; ``capacity ≥ len(shard_ids)`` leaves headroom so a
+        patch that grows a group's load fits without a shape change.  Padded
+        slots carry zero tokens and validity 0 — inert in every statistic.
+        """
+        shard_ids = np.asarray(shard_ids, dtype=np.int64)
+        if len(shard_ids) > capacity:
+            raise ValueError(
+                f"group holds {len(shard_ids)} shards > capacity {capacity}"
+            )
+        rows = np.zeros((capacity * self.microbatch, self.seq_len), dtype=np.int32)
+        valid = np.zeros((capacity,), dtype=np.float32)
+        for i, s in enumerate(shard_ids):
+            rows[i * self.microbatch : (i + 1) * self.microbatch] = tok.shard_batch(
+                self._table, int(s), step, self.microbatch, self.seq_len
+            )
+            valid[i] = 1.0
+        return rows, valid
 
     def unique_batch(self, step: int) -> np.ndarray:
         """The deduplicated (n_shards·mb, T) batch — the 'ground truth' data

@@ -79,8 +79,14 @@ class MeshExecutor(Executor):
     # ------------------------------------------------------------ internals
 
     def _place(self, arr, spec: P):
-        """Explicit placement: shard node-stacked inputs over the mesh."""
-        return jax.device_put(jnp.asarray(arr), NamedSharding(self.mesh, spec))
+        """Explicit placement: shard node-stacked inputs over the mesh.
+
+        ``arr`` may be a single array or an arbitrary pytree (a params dict);
+        the sharding applies leaf-wise, so broadcast pytrees replicate whole.
+        """
+        return jax.device_put(
+            jax.tree_util.tree_map(jnp.asarray, arr), NamedSharding(self.mesh, spec)
+        )
 
     def _pad_nodes(self, node_args):
         """Zero-pad the node axis to a device-count multiple.

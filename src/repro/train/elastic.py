@@ -81,16 +81,12 @@ class ElasticGroupManager:
             mat[take] |= mat[dead]
             mat[dead] = 0
         # Loads are no longer perfectly balanced after takeover; that is the
-        # price of elasticity until the next full re-shard. Rebuild the plan
-        # object bypassing the balance check.
-        from ..core.resilience import ResilienceSession
-
-        new_plan = object.__new__(RedundantShardPlan)
-        new_plan.assignment = dataclasses.replace(
-            fresh.assignment, matrix=mat, scheme="elastic_cyclic"
+        # price of elasticity until the next full re-shard (the plan accepts
+        # unbalanced assignments — only shards_per_group raises on them).
+        self.plan = RedundantShardPlan(
+            assignment=dataclasses.replace(
+                fresh.assignment, matrix=mat, scheme="elastic_cyclic"
+            ),
+            num_groups=self.plan.num_groups,
         )
-        new_plan.num_groups = self.plan.num_groups
-        new_plan.shards_per_group = self.plan.shards_per_group
-        new_plan.session = ResilienceSession(new_plan.assignment)
-        self.plan = new_plan
         self.reshard_count += 1

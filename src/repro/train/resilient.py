@@ -9,12 +9,16 @@ resilience).  Each step:
 
 1. a straggler mask over groups arrives (deadline-based on real clusters,
    simulated here);
-2. the recovery solver produces ``b`` (zeros at stragglers), cached per
-   alive-pattern;
-3. ``b`` is fed to the model's ``loss_fn`` as ``group_weights`` — making the
-   backward pass compute exactly  Σ_g b_g ∇L_g = Σ_s a_s ∇L_s  with
-   ``a_s ∈ [1, 1+δ]``: an approximately-uniformly-reweighted full-data
-   gradient, for ANY straggler pattern the assignment tolerates.
+2. the recovery solver produces ``b`` (zeros at stragglers) — on the hot
+   path the solve runs ON DEVICE inside the compiled train step (the mask is
+   runtime data, so unseen patterns cost zero host solves and zero
+   recompiles; :meth:`RedundantShardPlan.step_weights` is the standalone
+   host-visible form of the same solve), with the host LP kept as the
+   offline/exact parity oracle (:meth:`RedundantShardPlan.recovery`);
+3. ``b`` reweights the per-group gradients — the backward pass computes
+   exactly  Σ_g b_g ∇L_g = Σ_s a_s ∇L_s  with ``a_s ∈ [1, 1+δ]``: an
+   approximately-uniformly-reweighted full-data gradient, for ANY straggler
+   pattern the assignment tolerates.
 
 With the fractional-repetition assignment the band is exact (δ = 0) whenever
 at least one replica of every shard survives.
@@ -48,37 +52,106 @@ class RedundantShardPlan:
     :class:`repro.core.resilience.ResilienceSession` (``plan.session``) —
     the SAME cache the clustering entry points use, so a trainer and an
     evaluation pass over one assignment never solve a pattern twice.
+
+    The plan follows its session: when the session's elastic policy patches
+    the assignment mid-run (re-replicating at-risk shards away from
+    persistent stragglers), :attr:`current_assignment`,
+    :meth:`step_weights`, and the recovery cache all track the PATCHED
+    matrix — ``assignment`` keeps the original construction for static-shape
+    consumers (the data pipeline sizes its batches once, at plan creation).
     """
 
     assignment: Assignment
     num_groups: int
-    shards_per_group: int  # uniform load ℓ·n/G (balanced constructions only)
     session: ResilienceSession = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         if self.session is None:
             self.session = ResilienceSession(self.assignment)
-        loads = self.assignment.matrix.sum(axis=1)
-        if not (loads == loads[0]).all():
+        elif self.session.assignment is not self.assignment:
             raise ValueError(
-                "training plans need load-balanced assignments (cyclic/FR); "
-                f"got loads {loads}"
+                "session was built for a different assignment — its recovery "
+                "cache and patch lineage would not match this plan's matrix"
             )
 
     @property
     def num_shards(self) -> int:
         return self.assignment.num_shards
 
+    @property
+    def current_assignment(self) -> Assignment:
+        """The session's live assignment — the original construction until an
+        elastic patch replaces it."""
+        return self.session.assignment
+
+    @property
+    def shards_per_group(self) -> int:
+        """Uniform per-group load ℓ·n/G — only meaningful for balanced
+        constructions (cyclic/FR/singleton).
+
+        An unbalanced assignment (a Bernoulli draw, or a plan after elastic
+        takeover) has no single per-group load; silently reporting
+        ``loads[0]`` as if it were uniform mis-sizes every consumer that
+        multiplies by it (batch shapes, padding, load accounting).  Raise
+        instead, and point callers at :meth:`group_load` / :attr:`max_load`.
+        """
+        loads = self.assignment.matrix.sum(axis=1)
+        if loads.size == 0 or not (loads == loads[0]).all():
+            raise ValueError(
+                "shards_per_group is only defined for load-balanced "
+                f"assignments; got per-group loads {loads.tolist()} "
+                "(use group_load(g) / max_load for unbalanced plans)"
+            )
+        return int(loads[0])
+
+    @property
+    def max_load(self) -> int:
+        """Maximum per-group shard count — well-defined for ANY assignment
+        (the padding capacity unbalanced consumers size against)."""
+        return int(self.assignment.matrix.sum(axis=1).max())
+
+    def group_load(self, g: int) -> int:
+        """Shard count of group ``g`` under the ORIGINAL assignment."""
+        return int(self.assignment.matrix[g].sum())
+
     def group_shards(self, g: int) -> np.ndarray:
         """Shard ids processed by group g (sorted, fixed for the run)."""
         return self.assignment.shards_of(g)
+
+    def current_group_shards(self, g: int) -> np.ndarray:
+        """Shard ids of group g under the CURRENT (possibly elastically
+        patched) assignment."""
+        return self.current_assignment.shards_of(g)
 
     def recovery(self, alive: np.ndarray) -> RecoveryResult:
         return self.session.recovery(alive)
 
     def group_weights(self, alive: np.ndarray) -> tuple[np.ndarray, RecoveryResult]:
-        """(G,) float32 weights (b, zeros at stragglers) + diagnostics."""
+        """(G,) float32 weights (b, zeros at stragglers) + diagnostics.
+
+        Host-solved (LP/NNLS) — the offline/exact path and the parity
+        reference for :meth:`step_weights`."""
         return self.session.recovery_weights(alive)
+
+    def step_weights(self, alive: np.ndarray) -> np.ndarray:
+        """(G,) float32 per-step weights from the ON-DEVICE solver, against
+        the CURRENT (elastically patched) assignment.
+
+        The hot-path form of :meth:`group_weights`: no host LP, no
+        per-pattern recompiles (the compiled solver takes the mask as
+        runtime data).  Degenerate patterns — some shard with zero alive
+        replicas — fall back to the cached host solve, whose best-effort
+        ``b_full`` preserves the mass of every still-covered shard instead
+        of silently dropping it on device.
+        """
+        alive = np.asarray(alive, dtype=bool)
+        if not self.session.pattern_covers(alive):
+            # Uncovered shards: the device solver masks them out of its
+            # objective (their target is unreachable), which would silently
+            # drop their mass.  The host path reports them explicitly and
+            # still weights the covered remainder.
+            return self.session.recovery(alive).b_full.astype(np.float32)
+        return self.session.device_recovery_weights(alive).astype(np.float32)
 
     def degraded_weights(self, alive: np.ndarray) -> np.ndarray:
         """Fallback when Property 1 fails (too many dead groups): use the
@@ -95,11 +168,16 @@ def make_plan(
     redundancy: int = 2,
     scheme: str = "cyclic",
     rng: Optional[np.random.Generator] = None,
+    session_kwargs: Optional[dict] = None,
 ) -> RedundantShardPlan:
     """Build a load-balanced redundant plan.
 
     scheme ∈ {"cyclic", "fr", "bernoulli", "singleton"}.  ``redundancy`` is
     the per-shard replication ℓ (ℓ=1 ⇒ no resilience, the baseline).
+    ``session_kwargs`` configure the plan's :class:`ResilienceSession`
+    (``executor=``, ``elastic=``, ``device_iters=`` …) — the session is
+    always constructed around the plan's own assignment, so callers cannot
+    pair the plan with a foreign matrix.
     """
     if scheme == "cyclic":
         a = cyclic_assignment(num_shards, num_groups, redundancy)
@@ -116,7 +194,5 @@ def make_plan(
         a = singleton_assignment(num_shards, num_groups)
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
-    loads = a.matrix.sum(axis=1)
-    return RedundantShardPlan(
-        assignment=a, num_groups=num_groups, shards_per_group=int(loads[0])
-    )
+    session = ResilienceSession(a, **session_kwargs) if session_kwargs else None
+    return RedundantShardPlan(assignment=a, num_groups=num_groups, session=session)

@@ -19,7 +19,14 @@ from ..models.registry import ModelConfig
 from .compression import CompressionConfig, compress_with_error_feedback, init_ef_state
 from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
 
-__all__ = ["TrainState", "init_train_state", "make_train_step", "make_eval_step"]
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_eval_step",
+    "make_group_grad_fn",
+    "make_recovered_apply_fn",
+]
 
 
 class TrainState(NamedTuple):
@@ -116,6 +123,91 @@ def make_train_step(
         return TrainState(params=params, opt=opt, ef=ef), metrics
 
     return train_step
+
+
+def make_group_grad_fn(cfg: ModelConfig, ctx: T.ModelContext):
+    """Per-group statistics function for ``Executor.resilient_reduce_masked``
+    — the mesh-native resilient train step (Lemma 3 on gradients).
+
+    Returns ``fn(tokens_pool_g, valid_g, params, pool_idx)`` where
+
+    * ``tokens_pool_g`` — ``(P, C·mb, T)`` int32: group ``g``'s resident
+      microbatch pool (``P`` step batches, ``C`` shard slots of ``mb``
+      sequences each — ``C`` may exceed the group's load to leave headroom
+      for elastic patches);
+    * ``valid_g`` — ``(C,)`` float32: 1 for slots holding a real shard, 0 for
+      padding (padded slots are inert in every statistic);
+    * ``params`` — the model parameters (broadcast pytree);
+    * ``pool_idx`` — scalar int32: which pool entry this step consumes
+      (traced, so cycling the pool never recompiles).
+
+    The function returns the group's **shard-sum** statistics
+    ``{"grads", "loss", "ce", "tok"}`` — per-shard token-normalized losses
+    summed over the group's valid shard slots, and the gradient of that sum.
+    The executor's Lemma-3 combine then yields  Σ_g b_g Σ_{s∈P_g} ∇L̄_s
+    = Σ_s a_s ∇L̄_s  with ``a = bᵀA ∈ [1, 1+δ]ⁿ``: for δ = 0 (fractional
+    repetition under any coverage-preserving pattern) this is EXACTLY
+    ``n·∇(mean shard loss)`` — the full-data gradient, independent of the
+    straggler pattern.  :func:`make_recovered_apply_fn` divides by ``n``.
+    """
+
+    def group_stats(tokens_pool, valid, params, pool_idx):
+        tokens = jax.lax.dynamic_index_in_dim(
+            tokens_pool, pool_idx, axis=0, keepdims=False
+        )
+
+        def shard_sum_loss(p):
+            # loss_fn with group_weights=valid computes the valid-normalized
+            # MEAN of per-shard token-normalized losses; rescaling by the
+            # number of valid slots turns it into the shard SUM the Lemma-3
+            # combine needs (empty groups contribute an exact zero).
+            total, metrics = T.loss_fn(
+                p, {"tokens": tokens, "group_weights": valid}, cfg, ctx
+            )
+            n_valid = jnp.sum(valid)
+            return total * n_valid, (metrics["ce"] * n_valid, metrics["tokens"])
+
+        (loss_sum, (ce_sum, tok)), grads = jax.value_and_grad(
+            shard_sum_loss, has_aux=True
+        )(params)
+        return {"grads": grads, "loss": loss_sum, "ce": ce_sum, "tok": tok}
+
+    return group_stats
+
+
+def make_recovered_apply_fn(
+    opt_cfg: AdamWConfig,
+    num_shards: int,
+    *,
+    compression: Optional[CompressionConfig] = None,
+):
+    """Returns ``apply(state, stats) -> (state, metrics)``, ready to jit.
+
+    ``stats`` is the Lemma-3-combined output of :func:`make_group_grad_fn`
+    (shard-sum gradients/losses weighted by the recovery vector); dividing by
+    the TOTAL shard count ``n`` — a pattern-independent constant — recovers
+    the mean-loss gradient, so straggler and no-straggler steps apply
+    numerically identical updates whenever the recovery band is exact.
+    """
+    scale = 1.0 / float(num_shards)
+
+    def apply(state: TrainState, stats):
+        grads = jax.tree_util.tree_map(
+            lambda g: (g * jnp.asarray(scale, g.dtype)), stats["grads"]
+        )
+        ef = state.ef
+        if compression is not None and compression.enabled:
+            grads, ef = compress_with_error_feedback(compression, grads, ef)
+        params, opt, opt_metrics = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = {
+            "loss": stats["loss"] * scale,
+            "ce": stats["ce"] * scale,
+            "tokens": stats["tok"],
+        }
+        metrics.update(opt_metrics)
+        return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return apply
 
 
 def make_eval_step(cfg: ModelConfig, ctx: T.ModelContext):

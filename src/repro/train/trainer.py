@@ -1,17 +1,39 @@
 """The training loop: redundant pipeline + deadline straggling + recovery
 weighting + checkpoint/restart.  This is the host-side orchestration that a
-real cluster's per-step control plane would run."""
+real cluster's per-step control plane would run.
+
+Two recovery paths:
+
+* **Host path** (default, ``device_recovery=False``) — the per-step alive
+  mask is solved on the host (LP/NNLS via the plan's session cache) and the
+  resulting ``group_weights`` vector enters the jitted step as data.  Exact,
+  but every previously-unseen straggler pattern costs one host solve.
+* **Mesh-native path** (``device_recovery=True``) — the tentpole: per-group
+  gradients run through ``Executor.resilient_reduce_masked``, so the
+  recovery solve (projected gradient over the runtime alive mask) happens
+  INSIDE the compiled train step: zero host solves and zero recompiles on
+  unseen patterns.  Group token blocks live device-resident (node-stacked,
+  one row per DP group, pre-packed for ``resident_steps`` step batches);
+  when the session's :class:`~repro.core.resilience.ElasticPolicy`
+  re-replicates at-risk shards away from persistent stragglers, the trainer
+  re-packs ONLY the moved groups' rows and re-places them via
+  ``Executor.update_node_rows`` (a patch that outgrows the headroom
+  capacity triggers a counted full re-place instead).  Degenerate patterns
+  (some shard with zero alive replicas) fall back to the host-solved
+  best-effort weights rather than silently dropping the lost shards' mass
+  on device.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.resilience import ElasticPolicy, ResilienceSession
 from ..core.stragglers import StragglerScenario, make_scenario
 from ..data.pipeline import RedundantDataPipeline
 from ..models import transformer as T
@@ -21,7 +43,13 @@ from .compression import CompressionConfig
 from .elastic import ElasticGroupManager
 from .optimizer import AdamWConfig
 from .resilient import make_plan
-from .train_step import TrainState, init_train_state, make_train_step
+from .train_step import (
+    TrainState,
+    init_train_state,
+    make_group_grad_fn,
+    make_recovered_apply_fn,
+    make_train_step,
+)
 
 __all__ = ["TrainerConfig", "Trainer"]
 
@@ -42,7 +70,23 @@ class TrainerConfig:
     simulate_stragglers: bool = True
     straggler_scenario: str = "deadline"  # any repro.core.stragglers scenario
     straggler_deadline: float = 2.0
+    scenario_kwargs: Optional[dict] = None  # extra make_scenario kwargs
+                                            # (e.g. path= for trace replay)
     compression: Optional[CompressionConfig] = None
+    # ---- mesh-native resilient path (on-device gradient recovery) ----
+    device_recovery: bool = False  # recovery solve inside the compiled step
+    executor: str = "local"        # "local" (vmap) or "mesh" (shard_map);
+                                   # only consumed by the device_recovery
+                                   # path (enforced in Trainer.__init__)
+    elastic_patience: int = 0      # >0 arms ElasticPolicy(patience=...)
+    patch_headroom: int = 1        # spare shard slots per group for patches
+    resident_steps: int = 4        # device-resident step batches, cycled by
+                                   # step % resident_steps — the fused path
+                                   # trains over this FIXED pool (epoch-style
+                                   # revisiting), unlike the host path's
+                                   # fresh pipeline.batch(step) every step;
+                                   # raise it for long runs
+    recovery_iters: Optional[int] = None  # PGD iters (default: env/300)
 
 
 class Trainer:
@@ -57,10 +101,31 @@ class Trainer:
         self.tcfg = tcfg
         self.opt_cfg = opt_cfg or AdamWConfig(total_steps=tcfg.steps)
         self.ctx = ctx or T.ModelContext()
+        if not tcfg.device_recovery and tcfg.executor != "local":
+            raise ValueError(
+                f"executor={tcfg.executor!r} is only consumed by the "
+                "device_recovery path; the host path always runs the "
+                "single-process jitted step (set device_recovery=True)"
+            )
+        # The plan's session owns the executor, the elastic policy, and the
+        # pattern cache — the trainer is the third full consumer of
+        # ResilienceSession (after the batch and streaming runtimes).
+        session_kwargs = None
+        if tcfg.device_recovery:
+            session_kwargs = dict(
+                executor=tcfg.executor,
+                elastic=ElasticPolicy(
+                    enabled=tcfg.elastic_patience > 0,
+                    patience=max(1, tcfg.elastic_patience),
+                ),
+                device_iters=tcfg.recovery_iters,
+            )
         plan = make_plan(
             tcfg.num_groups, tcfg.num_shards,
             redundancy=tcfg.redundancy, scheme=tcfg.scheme,
+            session_kwargs=session_kwargs,
         )
+        self.plan = plan
         self.elastic = ElasticGroupManager(plan)
         self.pipeline = RedundantDataPipeline(
             plan, vocab=cfg.vocab, microbatch=tcfg.microbatch,
@@ -73,14 +138,74 @@ class Trainer:
             scen_kw["seed"] = tcfg.seed + 1
         if tcfg.straggler_scenario == "deadline":
             scen_kw["deadline"] = tcfg.straggler_deadline
+        scen_kw.update(tcfg.scenario_kwargs or {})
         self.scenario: StragglerScenario = make_scenario(
             tcfg.straggler_scenario, tcfg.num_groups,
             assignment=plan.assignment, **scen_kw,
         )
-        self._step_fn = jax.jit(
-            make_train_step(cfg, self.ctx, self.opt_cfg, compression=tcfg.compression)
-        )
+        if tcfg.device_recovery:
+            self._init_device_recovery()
+        else:
+            self._step_fn = jax.jit(
+                make_train_step(cfg, self.ctx, self.opt_cfg, compression=tcfg.compression)
+            )
         self.history: list[dict] = []
+
+    # ------------------------------------------- mesh-native resident state
+
+    def _init_device_recovery(self) -> None:
+        tcfg = self.tcfg
+        self._capacity = self.plan.shards_per_group + max(0, tcfg.patch_headroom)
+        self._pool = max(1, tcfg.resident_steps)
+        # Stable per-trainer function objects: the executor keys its jit
+        # cache on fn identity, so these must be created exactly once.
+        self._group_fn = make_group_grad_fn(self.cfg, self.ctx)
+        self._apply_fn = jax.jit(
+            make_recovered_apply_fn(
+                self.opt_cfg, self.plan.num_shards, compression=tcfg.compression
+            )
+        )
+        self._place_resident(full=False)
+        self.plan.session.add_patch_listener(self._on_patch)
+
+    def _pack_group_rows(self, g: int) -> tuple[np.ndarray, np.ndarray]:
+        """(P, C·mb, T) token pool + (C,) validity for group ``g`` under the
+        CURRENT assignment."""
+        shards = self.plan.current_group_shards(g)
+        toks, valid = [], None
+        for p in range(self._pool):
+            rows, valid = self.pipeline.shard_rows(shards, p, self._capacity)
+            toks.append(rows)
+        return np.stack(toks, axis=0), valid
+
+    def _place_resident(self, *, full: bool) -> None:
+        G = self.plan.num_groups
+        packed = [self._pack_group_rows(g) for g in range(G)]
+        tokens = np.stack([t for t, _ in packed], axis=0)  # (G, P, C·mb, T)
+        valid = np.stack([v for _, v in packed], axis=0)   # (G, C)
+        ex = self.plan.session.executor
+        self._res_tokens = ex.place_node_stacked(tokens)
+        self._res_valid = ex.place_node_stacked(valid)
+        if full:
+            self.plan.session.stats.full_repacks += 1
+
+    def _on_patch(self, moved: list[int], old_m: int, new_m: int) -> None:
+        """Patch-aware data movement: re-place ONLY the moved groups' token
+        blocks (``Executor.update_node_rows``); a patch that outgrew the
+        slot capacity forces a counted full re-place at the new capacity."""
+        if new_m > self._capacity:
+            self._capacity = new_m + max(0, self.tcfg.patch_headroom)
+            self._place_resident(full=True)
+            return
+        ex = self.plan.session.executor
+        rows = [self._pack_group_rows(g) for g in moved]
+        self._res_tokens = ex.update_node_rows(
+            self._res_tokens, moved, np.stack([t for t, _ in rows], axis=0)
+        )
+        self._res_valid = ex.update_node_rows(
+            self._res_valid, moved, np.stack([v for _, v in rows], axis=0)
+        )
+        self.plan.session.stats.moved_node_blocks += len(moved)
 
     # -------------------------------------------------------------- state
 
@@ -94,6 +219,56 @@ class Trainer:
         if self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None:
             state, start = restore_checkpoint(self.tcfg.ckpt_dir, state)
         return state, start
+
+    # -------------------------------------------------- mesh-native step
+
+    def _device_recovery_step(
+        self, state: TrainState, step: int, alive_t: np.ndarray
+    ) -> tuple[TrainState, Optional[dict]]:
+        """One step of the fused path.  Returns (state, record) — record is
+        ``None`` when every group straggled (step skipped)."""
+        sess = self.plan.session
+        ex = sess.executor
+        A = sess.assignment.matrix.astype(np.float32)
+        pool_idx = jnp.asarray(step % self._pool, jnp.int32)
+        node_args = (self._res_tokens, self._res_valid)
+        bcast = (state.params, pool_idx)
+        covered = sess.pattern_covers(alive_t)
+        if covered:
+            stats, b_dev = ex.resilient_reduce_masked(
+                self._group_fn, node_args, bcast, A, alive_t,
+                iters=sess.device_iters,
+            )
+            sess.stats.device_solves += 1
+            b_sum = float(jnp.asarray(b_dev).sum())
+        else:
+            # Degenerate pattern: host best-effort weights keep the covered
+            # shards' mass instead of silently dropping the lost ones.
+            w = self.plan.step_weights(alive_t)
+            if not w.any():
+                return state, None  # every group straggled: skip the step
+            # The resident node args are already padded to the executor's
+            # node-axis length (mesh pads G up to a device-count multiple);
+            # the weight vector must match, or resilient_reduce would re-pad
+            # the node axis off the shorter weights and misalign the blocks.
+            w_pad = np.zeros(int(self._res_valid.shape[0]), np.float32)
+            w_pad[: len(w)] = w
+            stats = ex.resilient_reduce(self._group_fn, node_args, bcast, w_pad)
+            b_sum = float(w.sum())
+        state, metrics = self._apply_fn(state, stats)
+        record = {
+            "step": step,
+            "loss": float(metrics["loss"]),
+            "ce": float(metrics["ce"]),
+            "grad_norm": float(metrics["grad_norm"]),
+            "stragglers": int((~alive_t).sum()),
+            "fallback": not covered,
+            "b_sum": b_sum,
+            "host_solves": sess.stats.host_solves,
+            "device_solves": sess.stats.device_solves,
+            "patches": sess.stats.elastic_patches,
+        }
+        return state, record
 
     # -------------------------------------------------------------- loop
 
@@ -113,26 +288,38 @@ class Trainer:
                 srec = next(self.scenario)
                 alive_t, latencies = srec.alive, srec.latencies
             else:
+                srec = None
                 alive_t = np.ones(self.tcfg.num_groups, dtype=bool)
                 latencies = np.zeros((0,))  # scenario-less: not modelled
-            weights, rec = self.elastic.step_weights(~alive_t)
-            if not weights.any():  # every group straggled: skip the step
-                self.history.append({"step": step, "skipped": True})
-                continue
-            batch = {
-                "tokens": jnp.asarray(self.pipeline.batch(step)),
-                "group_weights": jnp.asarray(weights),
-            }
-            state, metrics = self._step_fn(state, batch)
-            record = {
-                "step": step,
-                "loss": float(metrics["loss"]),
-                "ce": float(metrics["ce"]),
-                "grad_norm": float(metrics["grad_norm"]),
-                "stragglers": int((~alive_t).sum()),
-                "delta": float(rec.delta) if np.isfinite(rec.delta) else -1.0,
-                "covered": float(rec.covered_fraction),
-            }
+            if self.tcfg.device_recovery:
+                if srec is not None:
+                    ev = self.plan.session.observe(srec)
+                    if ev["patched"] and hasattr(self.scenario, "rebind"):
+                        # Re-aim the adversary at the patched assignment.
+                        self.scenario.rebind(self.plan.current_assignment)
+                state, record = self._device_recovery_step(state, step, alive_t)
+                if record is None:
+                    self.history.append({"step": step, "skipped": True})
+                    continue
+            else:
+                weights, rec = self.elastic.step_weights(~alive_t)
+                if not weights.any():  # every group straggled: skip the step
+                    self.history.append({"step": step, "skipped": True})
+                    continue
+                batch = {
+                    "tokens": jnp.asarray(self.pipeline.batch(step)),
+                    "group_weights": jnp.asarray(weights),
+                }
+                state, metrics = self._step_fn(state, batch)
+                record = {
+                    "step": step,
+                    "loss": float(metrics["loss"]),
+                    "ce": float(metrics["ce"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "stragglers": int((~alive_t).sum()),
+                    "delta": float(rec.delta) if np.isfinite(rec.delta) else -1.0,
+                    "covered": float(rec.covered_fraction),
+                }
             if latencies.size == self.tcfg.num_groups:
                 # Only the deadline scenario models latency; mask-only
                 # scenarios return an empty array.

@@ -1,0 +1,172 @@
+"""Property-based suite for the assignment-construction invariants.
+
+The paper's guarantees are quantified over ALL straggler patterns a
+construction tolerates — exactly the shape hand-picked example tests cannot
+pin.  For random ``(n, s, ℓ)`` draws across all four scheme families this
+suite asserts:
+
+* **Property-1 coverage** — every coverage-preserving pattern (each shard
+  keeps ≥ 1 alive replica) admits a feasible recovery ``b ≥ 0`` with
+  ``a = bᵀA_R ≥ 1``; every coverage-LOSING pattern is reported infeasible
+  with a non-empty ``uncovered`` set (never a silent bad band).
+* **Per-node load bounds** — the balanced constructions stay within one
+  shard of the uniform load ``ℓ·n/s``; Bernoulli columns keep ≥ 1 replica
+  (``ensure_cover``).
+* **δ-band of the recovered ``a``** — for every enumerated
+  coverage-preserving pattern (bounded enumeration: exhaustive when small,
+  seeded sampling otherwise), ``1 ≤ a_j ≤ 1+δ*`` on all shards; fractional
+  repetition must hit ``δ = 0`` EXACTLY.
+
+Example counts are tier-1-safe (small sizes, few examples, bounded pattern
+enumeration); the suite is skipped wholesale when the optional hypothesis
+dep is absent — the same guard as ``test_cells_property.py``.
+"""
+
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (
+    make_assignment,
+    node_loads,
+    shard_replication,
+)
+from repro.core.recovery import lp_recovery
+
+SCHEMES = ("singleton", "cyclic", "fractional_repetition", "bernoulli")
+
+# One shared draw for (scheme, s, ell, n): keep sizes small — every example
+# runs a bounded LP sweep, and tier-1 must stay fast.
+SHAPES = st.tuples(
+    st.sampled_from(SCHEMES),
+    st.integers(min_value=2, max_value=8),   # s nodes
+    st.integers(min_value=1, max_value=3),   # ell replication
+    st.integers(min_value=1, max_value=4),   # n = mult × s shards
+    st.integers(min_value=0, max_value=99),  # rng seed (bernoulli draw / sampling)
+)
+
+
+def _build(scheme, s, ell, mult, seed):
+    ell = min(ell, s)
+    if scheme == "fractional_repetition":
+        ell = max(1, [d for d in range(ell, 0, -1) if s % d == 0][0])
+    n = mult * s
+    rng = np.random.default_rng(seed)
+    a = make_assignment(scheme, n, s, ell=ell, rng=rng if scheme == "bernoulli" else None)
+    return a, ell, n
+
+
+def _patterns(s, max_t, limit, rng):
+    """Bounded enumeration of alive masks: exhaustive per straggler count
+    when C(s, t) is small, seeded sampling otherwise."""
+    for t in range(0, max_t + 1):
+        if math.comb(s, t) <= limit:
+            combos = itertools.combinations(range(s), t)
+        else:
+            combos = (
+                tuple(rng.choice(s, size=t, replace=False)) for _ in range(limit)
+            )
+        for dead in combos:
+            mask = np.ones(s, dtype=bool)
+            mask[list(dead)] = False
+            yield mask
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=SHAPES)
+def test_construction_shape_and_load_bounds(shape):
+    scheme, s, ell_req, mult, seed = shape
+    a, ell, n = _build(scheme, s, ell_req, mult, seed)
+    assert a.matrix.shape == (s, n)
+    assert np.isin(a.matrix, (0, 1)).all()
+    assert (shard_replication(a) >= 1).all(), "every shard must have a holder"
+    loads = node_loads(a)
+    if scheme == "singleton":
+        assert loads.max() - loads.min() <= 1
+        assert loads.max() == math.ceil(n / s)
+    elif scheme == "cyclic":
+        assert (shard_replication(a) == ell).all()
+        assert ell * (n // s) <= loads.min() and loads.max() <= ell * math.ceil(n / s)
+    elif scheme == "fractional_repetition":
+        assert (shard_replication(a) == ell).all()
+        g = s // ell
+        assert n // g <= loads.min() and loads.max() <= math.ceil(n / g)
+    else:  # bernoulli: randomized — only the hard guarantees
+        assert loads.max() <= n
+        assert int(a.matrix.sum()) >= n  # ≥ one replica per shard
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=SHAPES)
+def test_property1_band_over_bounded_pattern_enumeration(shape):
+    """For every enumerated pattern: coverage-preserving ⇒ feasible with
+    1 ≤ a ≤ 1+δ*; coverage-losing ⇒ explicitly infeasible + uncovered ids."""
+    scheme, s, ell_req, mult, seed = shape
+    a, ell, n = _build(scheme, s, ell_req, mult, seed)
+    rng = np.random.default_rng(seed)
+    max_t = min(2, s - 1)
+    for alive in _patterns(s, max_t, limit=12, rng=rng):
+        covered = a.matrix[alive].sum(axis=0) > 0
+        rec = lp_recovery(a, alive)
+        if covered.all():
+            assert rec.feasible, (scheme, alive)
+            assert rec.a.min() >= 1.0 - 1e-7          # lower band: no lost mass
+            assert rec.a.max() <= 1.0 + rec.delta + 1e-7  # upper band by def of δ*
+            assert rec.delta >= -1e-9
+            assert len(rec.uncovered) == 0
+        else:
+            assert not rec.feasible, (scheme, alive)
+            np.testing.assert_array_equal(
+                np.sort(rec.uncovered), np.flatnonzero(~covered)
+            )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_groups=st.integers(min_value=1, max_value=4),
+    ell=st.integers(min_value=1, max_value=3),
+    mult=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_fractional_repetition_delta_is_exactly_zero(s_groups, ell, mult, seed):
+    """FR's defining property: ANY pattern that keeps one replica of every
+    shard alive recovers with δ = 0 exactly — b picks one live replica group
+    per shard, so a ≡ 1 (not merely within a band)."""
+    s = s_groups * ell
+    n = mult * s
+    a = make_assignment("fractional_repetition", n, s, ell=ell)
+    rng = np.random.default_rng(seed)
+    max_t = min(ell - 1, s - 1)  # FR tolerates any ell−1 stragglers
+    for alive in _patterns(s, max_t, limit=10, rng=rng):
+        rec = lp_recovery(a, alive)
+        assert rec.feasible, alive
+        assert rec.delta <= 1e-9, f"FR must be exact, got delta={rec.delta}"
+        np.testing.assert_allclose(rec.a, 1.0, atol=1e-9)
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=SHAPES, t=st.integers(min_value=1, max_value=2))
+def test_recovered_band_bounds_additive_statistics(shape, t):
+    """Lemma 3 in property form: for any non-negative per-shard statistic,
+    the b-weighted combine of per-node sums lands in [F, (1+δ)·F]."""
+    scheme, s, ell_req, mult, seed = shape
+    a, ell, n = _build(scheme, s, ell_req, mult, seed)
+    rng = np.random.default_rng(seed)
+    t = min(t, s - 1)
+    alive = np.ones(s, dtype=bool)
+    if t:
+        alive[rng.choice(s, size=t, replace=False)] = False
+    if (a.matrix[alive].sum(axis=0) == 0).any():
+        return  # coverage-losing pattern: infeasibility covered elsewhere
+    rec = lp_recovery(a, alive)
+    assert rec.feasible
+    f = rng.uniform(0.1, 1.0, size=n)          # per-shard statistic, f ≥ 0
+    per_node = a.matrix.astype(np.float64) @ f  # node i: Σ_{j∈P_i} f_j
+    combined = float(rec.b_full @ per_node)
+    truth = float(f.sum())
+    assert truth * (1 - 1e-7) <= combined <= truth * (1 + rec.delta) * (1 + 1e-7)

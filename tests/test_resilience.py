@@ -805,3 +805,284 @@ def test_bench_scenarios_reports_zero_host_solves():
     assert any(field(d, "patches") > 0 for _n, _u, d in cells), (
         "sweep never exercised an elastic patch"
     )
+
+# ------------------------------------- randomized recovery-parity oracle
+
+
+def _recovered_gradient(b_full, A, shard_grads):
+    """Lemma 3 on gradients in linear-algebra form: node i's local gradient
+    is Σ_{s∈P_i} g_s; the combine is Σ_i b_i·(A g)_i = Σ_s (bᵀA)_s g_s."""
+    per_node = A.astype(np.float64) @ shard_grads  # (s, d)
+    return np.asarray(b_full, np.float64) @ per_node
+
+
+def test_recovery_parity_oracle_fuzzed_patterns():
+    """Seeded fuzz over straggler patterns: host-LP vs on-device-PGD
+    recovered gradients pinned at 1e-5 wherever the exact band is achievable
+    (FR always; cyclic for any ℓ−1 stragglers — δ* = 0 patterns), and
+    band-bounded for Bernoulli (where the LP optimum is non-unique, so the
+    two solvers legitimately pick different points of the feasible set)."""
+    from repro.core import (
+        bernoulli_assignment,
+        cyclic_assignment,
+        fixed_count_stragglers,
+        fractional_repetition_assignment,
+    )
+    from repro.core.recovery import jax_recovery_masked, lp_recovery
+
+    rng = np.random.default_rng(0)
+    d = 5
+    cases = [
+        ("fr", fractional_repetition_assignment(24, 8, 2), 1, True),
+        ("fr", fractional_repetition_assignment(24, 8, 2), 3, True),  # per-group deaths
+        ("cyclic", cyclic_assignment(24, 8, 2), 1, True),
+        ("cyclic", cyclic_assignment(24, 8, 3), 2, False),  # δ* > 0: band only
+        ("bernoulli", bernoulli_assignment(24, 8, ell=4.0, rng=rng), 1, False),
+    ]
+    exact_checked = 0
+    for name, a, t, exact in cases:
+        A = a.matrix
+        shard_grads = rng.normal(size=(a.num_shards, d))
+        truth = shard_grads.sum(axis=0)
+        for seed in range(6):
+            alive = fixed_count_stragglers(a.num_nodes, t, np.random.default_rng(seed))
+            if (A[alive].sum(axis=0) == 0).any():
+                continue  # degenerate patterns exercised separately below
+            lp = lp_recovery(a, alive)
+            assert lp.feasible
+            b_dev = np.asarray(
+                jax_recovery_masked(A.astype(np.float32), alive, iters=1200)
+            )
+            assert (b_dev[~alive] == 0).all(), "stragglers must get zero weight"
+            g_host = _recovered_gradient(lp.b_full, A, shard_grads)
+            g_dev = _recovered_gradient(b_dev, A, shard_grads)
+            scale = np.abs(truth).max()
+            if exact:
+                # δ* = 0 band is a point: both solvers must land on it.
+                np.testing.assert_allclose(g_dev, g_host, atol=1e-5 * scale)
+                np.testing.assert_allclose(g_dev, truth, atol=1e-5 * scale)
+                exact_checked += 1
+            else:
+                # Non-unique optimum: pin each solver to ITS achieved band —
+                # |recovered − truth| ≤ δ_achieved · Σ_s |g_s| coordinatewise.
+                gmass = np.abs(shard_grads).sum(axis=0)
+                for b in (lp.b_full, b_dev):
+                    ach = np.asarray(b, np.float64) @ A
+                    assert ach.min() >= 1.0 - 1e-3
+                    bound = (ach.max() - 1.0) * gmass + 1e-4 * scale
+                    assert (np.abs(_recovered_gradient(b, A, shard_grads) - truth) <= bound).all()
+    assert exact_checked >= 10  # the 1e-5 pins actually ran
+
+
+def test_recovery_parity_oracle_cost_path():
+    """The same oracle through the REAL paths: `session.step_cost` (PGD
+    inside the compiled step) vs the host-LP `resilient_cost` — 1e-5 on FR
+    (δ = 0), for several fuzzed coverage-preserving patterns."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ResilienceSession,
+        fractional_repetition_assignment,
+        lloyd,
+        resilient_cost,
+    )
+
+    pts = _pts(120, seed=11)
+    a = fractional_repetition_assignment(120, 6, 2)
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(2), jnp.asarray(pts), 3, iters=4).centers
+    )
+    sess = ResilienceSession(a)
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        alive = np.ones(6, dtype=bool)
+        alive[rng.integers(0, 6)] = False
+        if (a.matrix[alive].sum(axis=0) == 0).any():
+            continue
+        dev = sess.step_cost(pts, centers, alive)
+        host = float(resilient_cost(pts, centers, a, alive, recovery_method="lp"))
+        assert dev == pytest.approx(host, rel=1e-5), (seed, dev, host)
+    assert sess.stats.host_solves == 0  # the fused path never host-solved
+
+
+def test_step_weights_degenerate_pattern_falls_back_to_host():
+    """Uncovered-shard patterns must fall back to the host solver's
+    best-effort weights — covered shards keep their full mass; the device
+    solver (which masks lost shards out of its objective) is not consulted."""
+    from repro.train.resilient import make_plan
+
+    plan = make_plan(6, 6, redundancy=1, scheme="singleton")
+    alive = np.array([True, True, False, True, True, True])  # shard 2 lost
+    sess = plan.session
+    before = sess.stats.device_solves
+    w = plan.step_weights(alive)
+    assert sess.stats.device_solves == before, "device solver must be skipped"
+    assert sess.stats.host_solves == 1
+    a_ach = w.astype(np.float64) @ plan.current_assignment.matrix
+    covered = plan.current_assignment.matrix[alive].sum(axis=0) > 0
+    np.testing.assert_allclose(a_ach[covered], 1.0, atol=1e-7)  # mass preserved
+    assert (a_ach[~covered] == 0).all()  # lost shard reported, not faked
+    # Coverage-preserving patterns use the device path (no new host solves).
+    plan2 = make_plan(6, 6, redundancy=2, scheme="fr")
+    w2 = plan2.step_weights(np.array([True, False, True, True, True, True]))
+    assert plan2.session.stats.host_solves == 0
+    assert plan2.session.stats.device_solves == 1
+    np.testing.assert_allclose(
+        w2.astype(np.float64) @ plan2.current_assignment.matrix, 1.0, atol=1e-4
+    )
+
+
+def test_step_weights_follow_elastic_patch():
+    """After the session patches the assignment, plan.step_weights must
+    solve against the PATCHED matrix (the pattern that lost coverage before
+    the patch becomes device-solvable after it)."""
+    from repro.core import ElasticPolicy, ResilienceSession
+    from repro.core.assignment import cyclic_assignment
+    from repro.train.resilient import RedundantShardPlan
+
+    a = cyclic_assignment(8, 8, 2)
+    plan = RedundantShardPlan(
+        assignment=a, num_groups=8,
+        session=ResilienceSession(a, elastic=ElasticPolicy(enabled=True, patience=2)),
+    )
+    dead = np.ones(8, dtype=bool)
+    dead[[6, 7]] = False  # adjacent cyclic nodes: shard coverage lost
+    w0 = plan.step_weights(dead)  # host fallback (uncovered)
+    assert plan.session.stats.host_solves == 1
+    for _ in range(3):
+        plan.session.observe(dead)
+    assert plan.session.stats.elastic_patches >= 1
+    assert plan.current_assignment is not plan.assignment
+    w1 = plan.step_weights(dead)  # patched matrix covers everything → device
+    assert plan.session.stats.device_solves == 1
+    A_cur = plan.current_assignment.matrix
+    assert not (A_cur[dead].sum(axis=0) == 0).any()
+    np.testing.assert_allclose(w1.astype(np.float64) @ A_cur, 1.0, atol=1e-3)
+    assert w1.shape == w0.shape == (8,)
+
+
+# ----------------------------------------- satellite: shards_per_group guard
+
+
+def test_shards_per_group_raises_on_unbalanced():
+    """Regression: shards_per_group used to report loads[0] as if uniform —
+    on an unbalanced assignment that mis-sizes every consumer.  It must
+    raise a clear ValueError instead (max_load/group_load serve unbalanced
+    plans)."""
+    from repro.core.assignment import Assignment
+    from repro.train.resilient import RedundantShardPlan, make_plan
+
+    mat = np.zeros((3, 6), dtype=np.uint8)
+    mat[0, :4] = 1   # load 4
+    mat[1, 3:] = 1   # load 3
+    mat[2, [0, 5]] = 1  # load 2
+    plan = RedundantShardPlan(
+        assignment=Assignment(matrix=mat, scheme="crafted", params={}),
+        num_groups=3,
+    )
+    with pytest.raises(ValueError, match="load-balanced"):
+        _ = plan.shards_per_group
+    assert plan.max_load == 4
+    assert [plan.group_load(g) for g in range(3)] == [4, 3, 2]
+    # Balanced constructions keep the uniform answer.
+    assert make_plan(4, 8, redundancy=2, scheme="cyclic").shards_per_group == 4
+
+
+def test_elastic_reshard_plan_survives_unbalanced_loads():
+    """The group-manager's takeover path produces unbalanced plans on
+    purpose; plan construction must accept them (only shards_per_group
+    raises) and the data pipeline keeps its construction-time shapes."""
+    from repro.data.pipeline import RedundantDataPipeline
+    from repro.train.elastic import ElasticGroupManager
+    from repro.train.resilient import make_plan
+
+    plan = make_plan(4, 8, redundancy=2, scheme="cyclic")
+    pipe = RedundantDataPipeline(plan, vocab=64, microbatch=1, seq_len=8)
+    shape_before = pipe.batch_shape
+    mgr = ElasticGroupManager(plan)
+    mgr.mark_dead(0)
+    mgr.mark_dead(1)  # adjacent deaths → coverage lost → reshard
+    assert mgr.reshard_count >= 1
+    with pytest.raises(ValueError, match="load-balanced"):
+        _ = mgr.plan.shards_per_group
+    assert mgr.plan.max_load >= 2
+    assert pipe.batch_shape == shape_before  # static shapes snapshotted
+
+
+# --------------------------------------- scenario-matrix conformance test
+
+
+_SCENARIO_MATRIX = ("iid", "fixed", "adversarial", "deadline", "trace")
+
+
+@pytest.mark.parametrize("kind", _SCENARIO_MATRIX)
+def test_scenario_matrix_reset_replay_conformance(kind, tmp_path):
+    """Every make_scenario kind obeys the iterator contract uniformly:
+    deterministic given its construction args, reset() replays the exact
+    stream (masks AND step indices), records own their masks, and mask
+    shapes match the node count."""
+    from repro.core import cyclic_assignment, make_scenario, record_trace
+
+    s = 6
+    kw = {}
+    if kind in ("iid", "fixed", "deadline"):
+        kw["seed"] = 5
+    if kind == "iid":
+        kw["p_straggler"] = 0.3
+    if kind == "fixed":
+        kw["t"] = 2
+    if kind == "adversarial":
+        kw["assignment"] = cyclic_assignment(24, s, 2)
+        kw["t"] = 1
+    if kind == "trace":
+        path = str(tmp_path / "conformance.jsonl")
+        src = make_scenario("deadline", s, seed=9, p_spike=0.4)
+        record_trace(src, 7, path)
+        kw["path"] = path
+
+    scen = make_scenario(kind, s, **kw)
+    twin = make_scenario(kind, s, **kw)
+    first = [next(scen) for _ in range(7)]
+    for i, rec in enumerate(first):
+        assert rec.alive.shape == (s,) and rec.alive.dtype == bool
+        assert rec.index == i
+    # Same construction args → identical stream (cross-instance determinism).
+    for r1, r2 in zip(first, [next(twin) for _ in range(7)]):
+        np.testing.assert_array_equal(r1.alive, r2.alive)
+        np.testing.assert_allclose(r1.latencies, r2.latencies)
+    # Records own their masks: corrupting one must not perturb the stream.
+    first[3].alive[:] = ~first[3].alive
+    scen.reset()
+    again = [next(scen) for _ in range(7)]
+    for i, (r1, r2) in enumerate(zip(first, again)):
+        if i == 3:
+            np.testing.assert_array_equal(~r1.alive, r2.alive)
+        else:
+            np.testing.assert_array_equal(r1.alive, r2.alive)
+        assert r1.index == r2.index
+
+
+def test_scenario_trace_roundtrip_equality(tmp_path):
+    """record_trace → make_scenario("trace") reproduces EVERY source kind's
+    mask stream exactly (the conformance matrix's round-trip leg)."""
+    from repro.core import cyclic_assignment, make_scenario, record_trace
+
+    s = 5
+    sources = {
+        "iid": {"p_straggler": 0.25, "seed": 3},
+        "fixed": {"t": 1, "seed": 3},
+        "adversarial": {"assignment": cyclic_assignment(20, s, 2), "t": 2},
+        "deadline": {"seed": 3, "p_spike": 0.3},
+    }
+    for name, kw in sources.items():
+        path = str(tmp_path / f"{name}.jsonl")
+        src = make_scenario(name, s, **kw)
+        assert record_trace(src, 5, path) == 5
+        src.reset()
+        replay = make_scenario("trace", s, path=path)
+        for _ in range(5):
+            want, got = next(src), next(replay)
+            np.testing.assert_array_equal(got.alive, want.alive, err_msg=name)
+            if want.latencies.size:
+                np.testing.assert_allclose(got.latencies, want.latencies)

@@ -277,3 +277,255 @@ def test_training_under_stragglers_descends(cfg):
     straggled = sum(h.get("stragglers", 0) > 0 for h in t.history)
     assert straggled > 0  # the simulator actually fired
     assert np.mean(losses[-8:]) < np.mean(losses[:8]) - 0.01
+
+
+# ------------------------------------- mesh-native on-device recovery path
+
+
+def test_device_recovery_bit_matches_clean_run_fr(cfg):
+    """THE tentpole claim at trainer level: with FR (δ = 0) the fused
+    compiled-step path (recovery PGD over the runtime alive mask INSIDE the
+    step) produces the SAME parameter trajectory under a coverage-preserving
+    straggler pattern as with no stragglers — with zero host solves."""
+    import json
+
+    def run(trace_rows, tmpdir):
+        path = os.path.join(tmpdir, "trace.jsonl")
+        with open(path, "w") as f:
+            for row in trace_rows:
+                f.write(json.dumps({"alive": row}) + "\n")
+        tc = TrainerConfig(
+            num_groups=4, num_shards=4, redundancy=2, scheme="fr",
+            microbatch=1, seq_len=32, steps=5, simulate_stragglers=True,
+            straggler_scenario="trace", scenario_kwargs={"path": path},
+            device_recovery=True, resident_steps=2,
+        )
+        t = Trainer(cfg, tc, AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=5))
+        return t, t.run()
+
+    with tempfile.TemporaryDirectory() as d:
+        t_clean, s_clean = run([[1, 1, 1, 1]] * 5, d)
+        t_strag, s_strag = run([[1, 0, 1, 1]] * 5, d)
+    _tree_allclose(s_clean.params, s_strag.params, rtol=1e-5, atol=1e-6)
+    for t in (t_clean, t_strag):
+        assert t.plan.session.stats.host_solves == 0
+        assert t.plan.session.stats.device_solves == 5
+    assert all(h["stragglers"] == 1 for h in t_strag.history)
+    assert not any(h.get("fallback") for h in t_strag.history)
+
+
+def test_device_recovery_no_recompile_across_patterns(cfg):
+    """Unseen straggler patterns are runtime data: after the first compiled
+    step, new masks must not add jit-cache entries (zero re-lowers)."""
+    tc = TrainerConfig(
+        num_groups=4, num_shards=4, redundancy=2, scheme="fr",
+        microbatch=1, seq_len=32, steps=5, simulate_stragglers=True,
+        straggler_scenario="fixed", scenario_kwargs={"t": 1},
+        device_recovery=True, resident_steps=2,
+    )
+    t = Trainer(cfg, tc, AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=5))
+    state, start = t.init_state()
+    srec = next(t.scenario)
+    state, _ = t._device_recovery_step(state, 0, srec.alive)
+    ex = t.plan.session.executor
+    n_compiled = len(ex._jitted)
+    patterns = set()
+    for step in range(1, 5):
+        srec = next(t.scenario)
+        patterns.add(srec.alive.tobytes())
+        state, rec = t._device_recovery_step(state, step, srec.alive)
+        assert rec is not None
+    assert len(patterns) > 1, "scenario never varied the pattern"
+    assert len(ex._jitted) == n_compiled, "a new pattern re-lowered the step"
+    assert t.plan.session.stats.host_solves == 0
+
+
+def test_device_recovery_degenerate_pattern_falls_back(cfg):
+    """A pattern that loses a shard entirely (singleton scheme, one dead
+    group) must take the host best-effort path — the step still applies an
+    update from the surviving shards' mass instead of silently training on
+    device-dropped weights."""
+    import json
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        with open(path, "w") as f:
+            for _ in range(3):
+                f.write(json.dumps({"alive": [1, 0, 1, 1]}) + "\n")
+        tc = TrainerConfig(
+            num_groups=4, num_shards=4, redundancy=1, scheme="singleton",
+            microbatch=1, seq_len=32, steps=3, simulate_stragglers=True,
+            straggler_scenario="trace", scenario_kwargs={"path": path},
+            device_recovery=True, resident_steps=1,
+        )
+        t = Trainer(cfg, tc, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=3))
+        t.run()
+    assert all(h.get("fallback") for h in t.history)
+    sess = t.plan.session.stats
+    assert sess.host_solves == 1          # one pattern, cached after that
+    assert sess.device_solves == 0
+    assert all("loss" in h for h in t.history)  # training continued
+
+
+def test_device_recovery_elastic_patch_moves_only_changed_blocks(cfg):
+    """Persistent stragglers → ElasticPolicy patch → the trainer re-packs
+    ONLY the moved groups' resident token blocks (update_node_rows), the
+    recovered path returns to the device solver, and coverage is restored."""
+    import json
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        with open(path, "w") as f:
+            for _ in range(8):
+                f.write(json.dumps({"alive": [1, 1, 1, 1, 0, 0]}) + "\n")
+        tc = TrainerConfig(
+            num_groups=6, num_shards=6, redundancy=2, scheme="cyclic",
+            microbatch=1, seq_len=32, steps=6, simulate_stragglers=True,
+            straggler_scenario="trace", scenario_kwargs={"path": path},
+            device_recovery=True, elastic_patience=2, patch_headroom=2,
+            resident_steps=2,
+        )
+        t = Trainer(cfg, tc, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=6))
+        t.run()
+    s = t.plan.session.stats
+    assert s.elastic_patches >= 1
+    assert s.moved_node_blocks >= 1, "incremental re-place did not run"
+    assert s.full_repacks == 0, "patch should fit inside the headroom"
+    # Pre-patch the pattern is uncovered (host fallback); post-patch the
+    # device path serves it with zero uncovered shards.
+    assert t.history[0]["fallback"] is True
+    assert t.history[-1]["fallback"] is False
+    A = t.plan.current_assignment.matrix
+    alive = np.array([1, 1, 1, 1, 0, 0], dtype=bool)
+    assert int((A[alive].sum(axis=0) == 0).sum()) == 0
+    # Resident validity mask reflects the patched membership: some healthy
+    # group now holds more shards than its original load.
+    valid = np.asarray(t._res_valid)[: t.plan.num_groups]
+    assert valid.sum() > t.tcfg.num_shards * t.tcfg.redundancy - 1
+
+
+def test_device_recovery_descends_under_stragglers(cfg):
+    tc = TrainerConfig(
+        num_groups=4, num_shards=4, redundancy=2, scheme="fr",
+        microbatch=2, seq_len=48, steps=30, simulate_stragglers=True,
+        straggler_deadline=1.6, device_recovery=True, resident_steps=4,
+    )
+    t = Trainer(cfg, tc, AdamWConfig(lr=5e-3, warmup_steps=3, total_steps=30))
+    t.run()
+    losses = [h["loss"] for h in t.history if "loss" in h]
+    straggled = sum(h.get("stragglers", 0) > 0 for h in t.history)
+    assert straggled > 0
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    # Coverage-preserving rounds never host-solve; rounds where BOTH replicas
+    # of a shard straggled legitimately take the best-effort host fallback.
+    s = t.plan.session.stats
+    fallbacks = sum(bool(h.get("fallback")) for h in t.history)
+    assert s.host_solves <= max(fallbacks, s.uncovered_rounds)
+    assert s.device_solves == len(losses) - fallbacks
+
+
+# --------------------------------------- acceptance: 8-device mesh training
+
+
+def test_mesh_training_8_devices_parity_and_patching():
+    """ISSUE-5 acceptance: an 8-forced-host-device MESH training run under a
+    straggler scenario — recovered-gradient parity ≤ 1e-5 against the
+    no-straggler run for coverage-preserving patterns, host_solves == 0
+    after warmup, and zero uncovered shards after an elastic patch with only
+    the moved blocks re-placed (SessionStats counters)."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent(
+        """
+        import os, json, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.configs.qwen3_4b import smoke_config
+        from repro.train.trainer import Trainer, TrainerConfig
+        from repro.train.optimizer import AdamWConfig
+
+        cfg = smoke_config().validate()
+        tmpdir = tempfile.TemporaryDirectory()
+        def leaves(tree):
+            return [np.asarray(l, np.float32) for l in jax.tree_util.tree_leaves(tree)]
+
+        def trace(name, rows):
+            path = os.path.join(tmpdir.name, name + ".jsonl")
+            with open(path, "w") as f:
+                for r in rows:
+                    f.write(json.dumps({"alive": r}) + "\\n")
+            return path
+
+        def run(rows, **kw):
+            path = trace("run%d" % len(os.listdir(tmpdir.name)), rows)
+            tc = TrainerConfig(
+                num_groups=8, num_shards=8, redundancy=2, scheme="fr",
+                microbatch=1, seq_len=32, steps=4, simulate_stragglers=True,
+                straggler_scenario="trace", scenario_kwargs={"path": path},
+                device_recovery=True, executor="mesh", resident_steps=2, **kw)
+            t = Trainer(cfg, tc, AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=4))
+            return t, t.run()
+
+        # (1) gradient/trajectory parity: coverage-preserving FR pattern vs clean.
+        t_clean, s_clean = run([[1]*8]*4)
+        t_strag, s_strag = run([[1,1,0,1,1,1,1,1]]*4)
+        for a, b in zip(leaves(s_clean.params), leaves(s_strag.params)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        assert t_clean.plan.session.stats.host_solves == 0
+        assert t_strag.plan.session.stats.host_solves == 0
+        assert t_strag.plan.session.stats.device_solves == 4
+
+        # (2) elastic patch on mesh: persistent adjacent deaths (cyclic) →
+        # re-replication, only moved blocks placed, coverage restored, and
+        # the post-patch steps stay on the device path (no host solves
+        # beyond the pre-patch degenerate fallback).
+        path = trace("patch", [[1,1,1,1,1,1,0,0]] * 8)
+        tc = TrainerConfig(
+            num_groups=8, num_shards=8, redundancy=2, scheme="cyclic",
+            microbatch=1, seq_len=32, steps=6, simulate_stragglers=True,
+            straggler_scenario="trace", scenario_kwargs={"path": path},
+            device_recovery=True, executor="mesh", elastic_patience=2,
+            patch_headroom=2, resident_steps=2)
+        t = Trainer(cfg, tc, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=6))
+        t.run()
+        s = t.plan.session.stats
+        assert s.elastic_patches >= 1, s.as_dict()
+        assert s.moved_node_blocks >= 1, s.as_dict()
+        assert s.full_repacks == 0, s.as_dict()
+        A = t.plan.current_assignment.matrix
+        alive = np.array([1,1,1,1,1,1,0,0], dtype=bool)
+        assert int((A[alive].sum(axis=0) == 0).sum()) == 0
+        assert t.history[-1]["fallback"] is False
+        post_patch = [h for h in t.history if h.get("patches", 0) >= 1 and not h["fallback"]]
+        assert post_patch and all(h["host_solves"] == s.host_solves for h in post_patch[-1:])
+
+        # (3) regression: the degenerate host-fallback path on a mesh whose
+        # device count does NOT divide G (resident blocks padded 4 -> 8)
+        # must align the weight vector with the padded node axis, not crash.
+        path = trace("degenerate", [[1,0,1,1]] * 3)
+        tc = TrainerConfig(
+            num_groups=4, num_shards=4, redundancy=1, scheme="singleton",
+            microbatch=1, seq_len=32, steps=3, simulate_stragglers=True,
+            straggler_scenario="trace", scenario_kwargs={"path": path},
+            device_recovery=True, executor="mesh", resident_steps=1)
+        t = Trainer(cfg, tc, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=3))
+        t.run()
+        assert all(h.get("fallback") for h in t.history)
+        assert all("loss" in h for h in t.history)
+        assert t.plan.session.stats.host_solves == 1  # one pattern, cached
+        tmpdir.cleanup()
+        print("MESH_TRAIN_ACCEPTANCE_OK")
+        """
+    )
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=540, env=env,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "MESH_TRAIN_ACCEPTANCE_OK" in out.stdout

@@ -1,0 +1,102 @@
+"""Coverage gate: `make test-cov`.
+
+Runs the tier-1 suite under pytest-cov over ``src/repro`` and gates a
+combined line-coverage floor on the two packages this repo's guarantees
+live in — ``repro/core`` and ``repro/train`` — then prints a compact
+per-package summary so every PR sees the trajectory.
+
+Gated on the OPTIONAL pytest-cov dep (this repo never hard-requires
+anything outside the baked image): when the plugin is missing the gate
+degrades to a loud no-op with exit code 0, so `make test-all` stays green
+in minimal environments.
+
+Env knobs:
+
+* ``REPRO_COV_FLOOR``  — combined core+train line-coverage floor in percent
+  (default 50; ``0`` disables the gate but still prints the summary).
+* ``REPRO_COV_ALL=1``  — include the slow-marked compile-heavy tests
+  (``-m ""``) in the measured run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+FLOOR_DEFAULT = 50.0
+GATED_PACKAGES = ("repro/core/", "repro/train/")
+
+
+def _floor() -> float:
+    try:
+        return float(os.environ.get("REPRO_COV_FLOOR", str(FLOOR_DEFAULT)))
+    except ValueError:
+        return FLOOR_DEFAULT
+
+
+def main() -> int:
+    try:
+        import pytest_cov  # noqa: F401
+    except ImportError:
+        print(
+            "test-cov: pytest-cov is not installed — skipping the coverage "
+            "gate (install the `test` extra to enable it)."
+        )
+        return 0
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cov_json = os.path.join(repo, "coverage.json")
+    cmd = [
+        sys.executable, "-m", "pytest", "-q",
+        "--cov=repro", "--cov-report=term:skip-covered",
+        f"--cov-report=json:{cov_json}",
+    ]
+    if os.environ.get("REPRO_COV_ALL") == "1":
+        cmd += ["-m", ""]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    ret = subprocess.run(cmd, cwd=repo, env=env).returncode
+    if ret != 0:
+        print(f"test-cov: pytest failed (exit {ret})")
+        return ret
+    if not os.path.exists(cov_json):
+        print("test-cov: no coverage.json produced")
+        return 1
+
+    with open(cov_json) as f:
+        data = json.load(f)
+    per_pkg: dict[str, list[int]] = {}
+    for path, info in data.get("files", {}).items():
+        norm = path.replace(os.sep, "/")
+        for pkg in GATED_PACKAGES + ("repro/",):
+            if f"/{pkg}" in norm or norm.startswith(pkg):
+                s = info["summary"]
+                agg = per_pkg.setdefault(pkg, [0, 0])
+                agg[0] += s["covered_lines"]
+                agg[1] += s["num_statements"]
+                break
+
+    print("\ntest-cov summary (line coverage):")
+    for pkg in GATED_PACKAGES + ("repro/",):
+        cov, tot = per_pkg.get(pkg, [0, 0])
+        pct = 100.0 * cov / tot if tot else 0.0
+        label = pkg if pkg in GATED_PACKAGES else "repro/ (other)"
+        print(f"  {label:<18} {pct:6.1f}%  ({cov}/{tot} lines)")
+    gated_cov = sum(per_pkg.get(p, [0, 0])[0] for p in GATED_PACKAGES)
+    gated_tot = sum(per_pkg.get(p, [0, 0])[1] for p in GATED_PACKAGES)
+    gated_pct = 100.0 * gated_cov / gated_tot if gated_tot else 0.0
+    floor = _floor()
+    print(f"  core+train (gated) {gated_pct:6.1f}%  floor={floor:.0f}%")
+    if floor > 0 and gated_pct < floor:
+        print(f"test-cov: FAIL — core+train coverage {gated_pct:.1f}% < floor {floor:.0f}%")
+        return 1
+    print("test-cov: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
