@@ -5,13 +5,16 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all test-cov docs-check bench-kernels bench-scenarios bench-stream bench-train bench
+.PHONY: test test-all test-cov lint docs-check bench-kernels bench-scenarios bench-stream bench-train bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: docs-check bench-scenarios bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
+test-all: lint docs-check bench-scenarios bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
+
+lint:  ## jit-safety static analysis (AST lint + jaxpr/HLO hot-path audit) → ANALYSIS.json
+	timeout 300 $(PY) tools/lint.py
 
 test-cov:  ## tier-1 under pytest-cov; floor gated on core/ + train/ (REPRO_COV_FLOOR; skips loudly if pytest-cov missing)
 	timeout 600 $(PY) tools/check_cov.py

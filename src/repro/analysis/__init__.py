@@ -1,0 +1,34 @@
+"""repro.analysis — jit-safety static analysis for the compiled-step contract.
+
+The paper's guarantees only hold if recovery genuinely runs inside the
+compiled step: every hidden host sync or recompile reintroduces exactly the
+straggler-shaped latency tail the redundant assignment scheme exists to
+remove.  PRs 3–5 pinned that invariant with tests, but only for the code
+paths the tests happen to exercise — this package enforces it mechanically,
+over the whole codebase:
+
+* **Layer 1 — AST lint** (:mod:`repro.analysis.ast_lint`): repo-specific
+  Python AST checks over ``src/repro`` that flag jit-safety hazards —
+  implicit host syncs on traced values, recompile hazards, and host-solver
+  calls reachable from compiled-step code (via the
+  :func:`~repro.analysis.registry.compiled_path` registry and a
+  project-wide call graph).  Findings are fingerprinted against a
+  checked-in baseline (:mod:`repro.analysis.baseline`) so legacy debt
+  never blocks CI while new debt always does.
+* **Layer 2 — jaxpr/HLO audit** (:mod:`repro.analysis.jaxpr_audit`):
+  traces the registered compiled hot paths (train step, masked recovery
+  reduce, query dispatch — :mod:`repro.analysis.hotpaths`) and statically
+  asserts their jaxprs contain zero host callbacks, their lowered modules
+  contain zero host-transfer ops, and that each declared shape bucket
+  traces exactly once (no shape-dependent retraces).
+
+Entry point: ``tools/lint.py`` / ``make lint`` (emits ``ANALYSIS.json``).
+
+This module (and :mod:`~repro.analysis.registry`, which production code
+imports for the decorator) is dependency-free — importing it never pulls
+jax; the audit layer imports jax lazily.
+"""
+
+from .registry import compiled_path, registered_paths
+
+__all__ = ["compiled_path", "registered_paths"]

@@ -1,0 +1,816 @@
+"""Layer 1: repo-specific AST lint for jit-safety hazards.
+
+What counts as *compiled context* (code that must contain zero host work):
+
+* functions marked ``@compiled_path`` / ``@compiled_path(kind="step")``;
+* every nested ``def`` of a ``@compiled_path(kind="factory")`` function;
+* functions decorated with ``@jax.jit`` or passed (by name) to a trace
+  entry point — ``jax.jit`` / ``vmap`` / ``grad`` / ``lax.scan`` /
+  ``while_loop`` / ``cond`` / ``shard_map`` / …;
+* anything reachable from the above through the project call graph
+  (:mod:`repro.analysis.callgraph`).
+
+Inside compiled context the linter runs a two-tier taint pass — parameters
+are *param*-tainted, results of ``jnp.* / jax.* / lax.*`` calls (and any
+expression touching tainted values) are *derived*-tainted; ``.shape`` /
+``.ndim`` / ``.dtype`` / ``len()`` projections untaint (static under
+trace) — and flags:
+
+====== ======== ==========================================================
+rule   severity finding
+====== ======== ==========================================================
+JS101  error    ``float()``/``int()``/``bool()``/``complex()`` on a traced
+                value — an implicit blocking device→host sync (and a
+                ``TracerConversionError`` on untested paths).
+JS102  error    ``.item()`` / ``.tolist()`` / ``np.asarray()`` /
+                ``np.array()`` on a traced value — host materialization.
+JS103  error    ``if``/``while``/``assert``/ternary on a *derived* traced
+                value — Python control flow on traced data (``is None``
+                structure checks are exempt: static under trace).
+JS104  error    Python ``for`` over a derived traced value.
+JS105  warn     [``kind="host"`` hot paths only] per-value device sync
+                (``float()``/``np.asarray()``/``.item()`` on a value
+                produced by a compiled call) — every one is a separate
+                blocking round-trip; batch through ONE ``jax.device_get``.
+JS201  warn     ``jax.jit`` constructed inside a function body without a
+                cache (``functools.lru_cache`` on the enclosing function,
+                or assignment into a subscripted cache dict) — re-lowers
+                per call/instance.
+JS202  error    non-hashable or array-valued static args: mutable defaults
+                on ``static_argnums``/``static_argnames`` parameters, or a
+                visible call site passing an array-valued expression for a
+                static arg (retrace per value, or a runtime TypeError).
+JS203  info     branching on ``.shape``/``.ndim``/``len()`` of traced
+                values inside compiled code — per-shape specialization;
+                must be covered by a declared shape bucket (non-fatal).
+JS301  error    host solver (``solve_recovery``/``lp_recovery``/
+                ``nnls_recovery``/``uniform_recovery``/``scipy.*``)
+                reachable from compiled-step code.
+====== ======== ==========================================================
+
+Inline suppression: append ``# repro-lint: disable=JS201`` (comma-separate
+several rules) to the flagged line.  Cross-run suppression: the baseline
+file (:mod:`repro.analysis.baseline`).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import re
+from typing import Iterable, Optional
+
+from .callgraph import FunctionInfo, Project, dotted_name, load_project
+
+__all__ = ["Finding", "RULES", "lint_project", "lint_paths", "lint_source"]
+
+RULES: dict[str, tuple[str, str]] = {
+    "JS101": ("error", "host-sync cast on a traced value inside compiled code"),
+    "JS102": ("error", "host materialization of a traced value inside compiled code"),
+    "JS103": ("error", "Python branch on a traced value inside compiled code"),
+    "JS104": ("error", "Python iteration over a traced value inside compiled code"),
+    "JS105": ("warn", "per-value device sync on a hot host path"),
+    "JS201": ("warn", "jax.jit constructed inside a function body without a cache"),
+    "JS202": ("error", "non-hashable or array-valued static argument to jax.jit"),
+    "JS203": ("info", "shape-dependent Python control flow in compiled code"),
+    "JS301": ("error", "host solver reachable from compiled-step code"),
+}
+
+# Severity ordering for reports; "info" findings never affect the exit code.
+SEVERITY_ORDER = {"error": 0, "warn": 1, "info": 2}
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_CAST_BUILTINS = {"float", "int", "bool", "complex"}
+_NP_MATERIALIZE = {
+    "np.asarray", "np.array", "np.ascontiguousarray", "np.asanyarray",
+    "numpy.asarray", "numpy.array", "numpy.ascontiguousarray",
+    "onp.asarray", "onp.array",
+}
+_MATERIALIZE_METHODS = {"item", "tolist", "__array__"}
+# Attribute projections of a traced array that are static under trace.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval", "itemsize"}
+# jax calls that return host values (sanctioned sync points / metadata).
+_UNTAINTED_JAX = {
+    "jax.device_get", "jax.devices", "jax.device_count", "jax.local_devices",
+    "jax.tree_util.tree_structure", "jax.eval_shape", "jnp.shape", "jnp.ndim",
+}
+# Builtins whose results are host data regardless of argument taint.
+_UNTAINTED_BUILTINS = {
+    "isinstance", "issubclass", "hasattr", "callable", "type", "id", "repr",
+    "str", "format", "len",
+}
+# Parameters that by repo convention hold static host config, never arrays.
+_STATIC_PARAM_NAMES = {
+    "self", "cls", "cfg", "config", "mcfg", "mesh", "ctx", "impl", "name",
+    "kind", "axis", "axis_name", "model_axis", "fsdp_axis", "batch_axes",
+    "window", "causal", "eps", "theta", "iters", "lr", "ell", "seed",
+    "dtype", "compute_dtype", "method", "backend", "mode", "plan", "rng",
+}
+# Methods that stay on device when called on a device value (array API);
+# any other method call degrades to its receiver's tier at most.
+_ARRAY_METHODS = {
+    "sum", "mean", "any", "all", "max", "min", "prod", "astype", "reshape",
+    "transpose", "dot", "ravel", "flatten", "squeeze", "cumsum", "cumprod",
+    "argmax", "argmin", "argsort", "sort", "copy", "conj", "take", "clip",
+    "round", "var", "std", "T", "at", "set", "add", "block_until_ready",
+}
+# Host-side solver entry points that must never be reachable from a
+# compiled step (module-qualified call-graph keys, plus raw-text patterns).
+_HOST_SOLVER_KEYS = {
+    "repro.core.recovery:solve_recovery",
+    "repro.core.recovery:lp_recovery",
+    "repro.core.recovery:nnls_recovery",
+    "repro.core.recovery:uniform_recovery",
+}
+_HOST_SOLVER_NAMES = {"solve_recovery", "lp_recovery", "nnls_recovery", "uniform_recovery"}
+_HOST_SOLVER_PATTERNS = re.compile(
+    r"^(scipy\.|sp\.optimize|linprog$|nnls$|np\.linalg\.lstsq|numpy\.linalg\.lstsq)"
+)
+# Method names whose call results live on device (host hot-path taint
+# sources): the executor seam plus the `*_fn` compiled-callable idiom.
+_DEVICE_PRODUCERS = {
+    "resilient_reduce", "resilient_reduce_masked", "map_nodes",
+    "replicated_compute", "place_node_stacked", "place_broadcast",
+    "update_node_rows",
+}
+_BARE_TRACE_ENTRIES = {
+    "jit", "vmap", "pmap", "shard_map", "grad", "value_and_grad",
+    "checkpoint", "remat",
+}
+_TRACE_ENTRY_SUFFIXES = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "scan", "while_loop",
+    "cond", "fori_loop", "shard_map", "checkpoint", "remat", "custom_jvp",
+    "custom_vjp", "associative_scan", "map",
+}
+_TRACE_ENTRY_HEADS = {"jax", "lax", "jnp"}
+_CACHE_DECORATORS = {
+    "functools.lru_cache", "lru_cache", "functools.cache", "cache",
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str
+    path: str          # as given to the linter (display form)
+    module: str
+    qualname: str
+    line: int
+    col: int
+    message: str
+    snippet: str       # stripped source line (fingerprint input)
+
+    @property
+    def fingerprint(self) -> str:
+        # Line-number independent: survives unrelated edits above the finding.
+        basename = self.module  # module names are path-independent
+        h = hashlib.sha1(
+            f"{self.rule}|{basename}|{self.qualname}|{self.snippet}".encode()
+        )
+        return h.hexdigest()[:16]
+
+    @property
+    def fatal(self) -> bool:
+        return self.severity in ("error", "warn")
+
+    def format(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: {self.rule} [{self.severity}] "
+            f"{self.qualname}: {self.message}"
+        )
+
+
+def _taint_max(*tiers: Optional[str]) -> Optional[str]:
+    if "derived" in tiers:
+        return "derived"
+    if "param" in tiers:
+        return "param"
+    return None
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — static structure checks."""
+    return (
+        isinstance(test, ast.Compare)
+        and len(test.ops) == 1
+        and isinstance(test.ops[0], (ast.Is, ast.IsNot))
+    )
+
+
+def _compiled_path_marker(fn: FunctionInfo) -> Optional[str]:
+    """Return the compiled_path kind if fn carries the decorator, else None."""
+    for dec, name in zip(getattr(fn.node, "decorator_list", []), fn.decorators):
+        if not name or name.split(".")[-1] != "compiled_path":
+            continue
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant):
+                    return str(kw.value.value)
+            return "step"
+        return "step"
+    return None
+
+
+def _is_trace_entry(call_name: Optional[str]) -> bool:
+    if not call_name:
+        return False
+    parts = call_name.split(".")
+    if len(parts) == 1:
+        return parts[0] in _BARE_TRACE_ENTRIES
+    return parts[0] in _TRACE_ENTRY_HEADS and parts[-1] in _TRACE_ENTRY_SUFFIXES
+
+
+def _resolve_name(proj: Project, caller: Optional[FunctionInfo], module: str, name: str) -> Optional[str]:
+    """Resolve a bare/dotted name used as a *value* (not call) to a function key."""
+    if caller is not None:
+        key = proj.resolve_call(caller, name)
+        if key:
+            return key
+        # nested def of the caller itself
+        key = f"{caller.module}:{caller.qualname}.<locals>.{name}"
+        if key in proj.functions:
+            return key
+        return None
+    mod = proj.modules.get(module)
+    if mod and name in mod.toplevel:
+        return f"{module}:{name}"
+    return None
+
+
+class _CompiledContext:
+    """Discovery of compiled-context functions across a Project."""
+
+    def __init__(self, proj: Project):
+        self.proj = proj
+        self.kinds: dict[str, str] = {}       # key -> marker kind (explicit)
+        self.roots: set[str] = set()
+        self._discover_markers()
+        self._discover_trace_entry_args()
+        self.compiled: set[str] = proj.reachable(self.roots)
+        # Host hot paths are linted under their own rules, never propagated.
+        self.compiled -= {k for k, kind in self.kinds.items() if kind in ("host", "factory")}
+
+    def _discover_markers(self) -> None:
+        for key, fn in self.proj.functions.items():
+            kind = _compiled_path_marker(fn)
+            if kind:
+                self.kinds[key] = kind
+                if kind == "step":
+                    self.roots.add(key)
+                elif kind == "factory":
+                    prefix = f"{fn.qualname}.<locals>."
+                    for k2, fn2 in self.proj.functions.items():
+                        if fn2.module == fn.module and fn2.qualname.startswith(prefix):
+                            self.roots.add(k2)
+            # @jax.jit-decorated defs are compiled bodies
+            for name in fn.decorators:
+                if name in _JIT_NAMES:
+                    self.roots.add(key)
+
+    def _discover_trace_entry_args(self) -> None:
+        """Functions passed by name to jit/vmap/scan/… anywhere in the project."""
+        for mod in self.proj.modules.values():
+            enclosing: list[Optional[FunctionInfo]] = []
+
+            class V(ast.NodeVisitor):
+                def __init__(self, outer):
+                    self.outer = outer
+
+                def visit_FunctionDef(self, node):
+                    qual = self.outer._qual_of(mod, node)
+                    enclosing.append(self.outer.proj.functions.get(f"{mod.name}:{qual}") if qual else None)
+                    self.generic_visit(node)
+                    enclosing.pop()
+
+                visit_AsyncFunctionDef = visit_FunctionDef
+
+                def visit_Call(self, node: ast.Call):
+                    name = dotted_name(node.func)
+                    if _is_trace_entry(name):
+                        caller = next((f for f in reversed(enclosing) if f), None)
+                        for arg in node.args:
+                            aname = dotted_name(arg)
+                            if aname is None:
+                                continue
+                            key = _resolve_name(self.outer.proj, caller, mod.name, aname)
+                            if key:
+                                self.outer.roots.add(key)
+                    self.generic_visit(node)
+
+            V(self).visit(mod.tree)
+
+    def _qual_of(self, mod, node) -> Optional[str]:
+        for qual, fn in mod.functions.items():
+            if fn.node is node:
+                return qual
+        return None
+
+
+class _FunctionLinter:
+    """Taint pass + rule checks over ONE function body (nested defs skipped)."""
+
+    def __init__(
+        self,
+        fn: FunctionInfo,
+        *,
+        mode: str,                # "compiled" | "host"
+        findings: list[Finding],
+        source_lines: list[str],
+        display_path: str,
+    ):
+        self.fn = fn
+        self.mode = mode
+        self.findings = findings
+        self.lines = source_lines
+        self.display_path = display_path
+        self.taint: dict[str, str] = {}
+        if mode == "compiled":
+            args = fn.node.args
+            for a in (
+                list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+                + ([args.vararg] if args.vararg else [])
+                + ([args.kwarg] if args.kwarg else [])
+            ):
+                if a.arg not in _STATIC_PARAM_NAMES:
+                    self.taint[a.arg] = "param"
+
+    # ------------------------------------------------------------ taint pass
+
+    def _call_taint(self, node: ast.Call) -> Optional[str]:
+        name = dotted_name(node.func) or ""
+        arg_taint = _taint_max(
+            *[self._expr(a) for a in node.args],
+            *[self._expr(kw.value) for kw in node.keywords],
+        )
+        if name in _UNTAINTED_JAX or name in _UNTAINTED_BUILTINS:
+            return None
+        head = name.split(".")[0]
+        last = name.split(".")[-1]
+        if head in ("jnp", "jax", "lax", "jsp"):
+            return "derived"
+        if self.mode == "host":
+            if last in _DEVICE_PRODUCERS or last.endswith("_fn"):
+                return "derived"
+            if isinstance(node.func, ast.Call):  # curried compiled callable
+                return "derived"
+        if isinstance(node.func, ast.Attribute):
+            base = self._expr(node.func.value)
+            if base:
+                # Array-API method on a tainted value (x.sum(), x.any(), …)
+                # stays on device; any other method (str.startswith,
+                # dict.get, …) at most carries its receiver's tier.
+                if node.func.attr in _ARRAY_METHODS:
+                    return "derived"
+                return _taint_max(base, arg_taint) and "param"
+        if name in _CAST_BUILTINS:
+            return None  # result is host data by construction
+        # Generic call: taint flows through but never *escalates* — only
+        # jnp/jax calls (and array methods) mint derived values.  This keeps
+        # dispatch helpers (`resolve(...)`, `range(cfg.n)`) from turning
+        # config params into "traced data".
+        return "param" if arg_taint else None
+
+    def _expr(self, node: Optional[ast.AST]) -> Optional[str]:
+        if node is None or isinstance(node, ast.Constant):
+            return None
+        if isinstance(node, ast.Name):
+            return self.taint.get(node.id)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return None
+            return self._expr(node.value)
+        if isinstance(node, ast.Subscript):
+            return _taint_max(self._expr(node.value))
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, (ast.BinOp,)):
+            return _taint_max(self._expr(node.left), self._expr(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self._expr(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return _taint_max(*[self._expr(v) for v in node.values])
+        if isinstance(node, ast.Compare):
+            return _taint_max(self._expr(node.left), *[self._expr(c) for c in node.comparators])
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return _taint_max(*[self._expr(e) for e in node.elts])
+        if isinstance(node, ast.Starred):
+            return self._expr(node.value)
+        if isinstance(node, ast.IfExp):
+            return _taint_max(self._expr(node.body), self._expr(node.orelse))
+        if isinstance(node, ast.JoinedStr):
+            return None
+        if isinstance(node, ast.Dict):
+            return _taint_max(*[self._expr(v) for v in node.values])
+        return None
+
+    def _assign_targets(self, target: ast.AST, tier: Optional[str]) -> None:
+        if isinstance(target, ast.Name):
+            if tier:
+                self.taint[target.id] = _taint_max(self.taint.get(target.id), tier)
+            else:
+                self.taint.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._assign_targets(el, tier)
+        elif isinstance(target, ast.Starred):
+            self._assign_targets(target.value, tier)
+        # attribute/subscript targets: no local name to track
+
+    def _taint_pass(self, body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                self.taint.pop(stmt.name, None)  # nested defs are host callables
+                continue
+            if isinstance(stmt, ast.Assign):
+                tier = self._expr(stmt.value)
+                for t in stmt.targets:
+                    self._assign_targets(t, tier)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._assign_targets(stmt.target, self._expr(stmt.value))
+            elif isinstance(stmt, ast.AugAssign):
+                tier = _taint_max(self._expr(stmt.value), self._expr(stmt.target))
+                self._assign_targets(stmt.target, tier)
+            elif isinstance(stmt, ast.For):
+                self._assign_targets(stmt.target, self._expr(stmt.iter))
+                self._taint_pass(stmt.body)
+                self._taint_pass(stmt.orelse)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                self._taint_pass(stmt.body)
+                self._taint_pass(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                self._taint_pass(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._taint_pass(stmt.body)
+                for h in stmt.handlers:
+                    self._taint_pass(h.body)
+                self._taint_pass(stmt.orelse)
+                self._taint_pass(stmt.finalbody)
+
+    # ------------------------------------------------------------ rule pass
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", self.fn.node.lineno)
+        idx = line - 1
+        snippet = self.lines[idx].strip() if 0 <= idx < len(self.lines) else ""
+        self.findings.append(
+            Finding(
+                rule=rule, severity=RULES[rule][0], path=self.display_path,
+                module=self.fn.module, qualname=self.fn.qualname,
+                line=line, col=getattr(node, "col_offset", 0),
+                message=message, snippet=snippet,
+            )
+        )
+
+    def _check_expr_rules(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = dotted_name(sub.func) or ""
+            last = name.split(".")[-1]
+            if name in _CAST_BUILTINS and sub.args:
+                tier = self._expr(sub.args[0])
+                if tier and self.mode == "compiled":
+                    self._emit(
+                        "JS101", sub,
+                        f"{name}() on a traced value forces a blocking "
+                        "device→host sync (TracerConversionError on untested "
+                        "paths); keep the value on device (jnp ops) or fetch "
+                        "it once with jax.device_get",
+                    )
+                elif tier == "derived" and self.mode == "host":
+                    self._emit(
+                        "JS105", sub,
+                        f"{name}() on a device value — a separate blocking "
+                        "transfer per value; batch every per-step fetch "
+                        "through ONE jax.device_get call",
+                    )
+            elif (name in _NP_MATERIALIZE or last in _MATERIALIZE_METHODS):
+                if last in _MATERIALIZE_METHODS:
+                    tier = self._expr(sub.func.value) if isinstance(sub.func, ast.Attribute) else None
+                else:
+                    tier = self._expr(sub.args[0]) if sub.args else None
+                if tier and self.mode == "compiled":
+                    self._emit(
+                        "JS102", sub,
+                        f"{name or last}() materializes a traced value on the "
+                        "host inside compiled code; use jnp.asarray / keep "
+                        "the computation on device",
+                    )
+                elif tier == "derived" and self.mode == "host":
+                    self._emit(
+                        "JS105", sub,
+                        f"{name or last}() on a device value — a separate "
+                        "blocking transfer per value; batch every per-step "
+                        "fetch through ONE jax.device_get call",
+                    )
+
+    def _shape_dependent(self, test: ast.AST) -> bool:
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Attribute) and sub.attr in ("shape", "ndim"):
+                if isinstance(sub.value, ast.Name) and sub.value.id in self.taint:
+                    return True
+            if isinstance(sub, ast.Call) and dotted_name(sub.func) == "len" and sub.args:
+                if isinstance(sub.args[0], ast.Name) and sub.args[0].id in self.taint:
+                    return True
+        return False
+
+    def _check_stmt_rules(self, body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            for small in ast.walk(stmt):
+                if isinstance(small, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    break
+            tests: list[ast.AST] = []
+            if isinstance(stmt, (ast.If, ast.While)):
+                tests.append(stmt.test)
+            elif isinstance(stmt, ast.Assert):
+                tests.append(stmt.test)
+            if self.mode == "compiled":
+                for test in tests:
+                    if _is_none_check(test):
+                        continue
+                    if self._shape_dependent(test):
+                        self._emit(
+                            "JS203", stmt,
+                            "branch on .shape/.ndim/len() of a traced value — "
+                            "per-shape specialization; every distinct shape "
+                            "re-traces and must map to a declared shape bucket",
+                        )
+                    elif self._expr(test) == "derived":
+                        self._emit(
+                            "JS103", stmt,
+                            "Python control flow on a traced value — the trace "
+                            "cannot branch on data; use jnp.where / lax.cond",
+                        )
+                if isinstance(stmt, ast.For) and self._expr(stmt.iter) == "derived":
+                    self._emit(
+                        "JS104", stmt,
+                        "Python iteration over a traced value unrolls (or "
+                        "fails) at trace time; use lax.scan / lax.fori_loop",
+                    )
+                # ternaries anywhere in the statement
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.IfExp) and not _is_none_check(sub.test):
+                        if self._expr(sub.test) == "derived":
+                            self._emit(
+                                "JS103", sub,
+                                "ternary on a traced value — use jnp.where",
+                            )
+            self._check_expr_rules(stmt)
+            if isinstance(stmt, (ast.If, ast.While, ast.For)):
+                self._check_stmt_rules(stmt.body)
+                self._check_stmt_rules(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                self._check_stmt_rules(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._check_stmt_rules(stmt.body)
+                for h in stmt.handlers:
+                    self._check_stmt_rules(h.body)
+                self._check_stmt_rules(stmt.orelse)
+                self._check_stmt_rules(stmt.finalbody)
+
+    def run(self) -> None:
+        body = self.fn.node.body
+        self._taint_pass(body)
+        self._taint_pass(body)  # second pass: fixpoint for use-before-def
+        self._check_stmt_rules(body)
+
+
+def _lint_jit_in_body(
+    proj: Project, findings: list[Finding], display: dict[str, str], lines: dict[str, list[str]]
+) -> None:
+    """JS201/JS202 over every function body in the project."""
+    for key, fn in proj.functions.items():
+        if any(d in _CACHE_DECORATORS for d in fn.decorators):
+            continue
+        # Collect subscript-cached assignment value ids: self._jitted[k] = jax.jit(...)
+        cached_calls: set[int] = set()
+        static_jits: list[tuple[ast.Call, str]] = []
+        for stmt in ast.walk(fn.node):
+            if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Subscript) for t in stmt.targets
+            ):
+                for sub in ast.walk(stmt.value):
+                    if isinstance(sub, ast.Call) and dotted_name(sub.func) in _JIT_NAMES:
+                        cached_calls.add(id(sub))
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not fn.node:
+                # nested defs are their own FunctionInfos — but their
+                # decorators belong to the ENCLOSING call frequency, so a
+                # @jax.jit decorator on a nested def is a jit-in-body too.
+                for dec in node.decorator_list:
+                    dec_name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+                    if dec_name in _JIT_NAMES and not any(
+                        d in _CACHE_DECORATORS for d in fn.decorators
+                    ):
+                        _emit_free(
+                            findings, proj, fn, dec, "JS201", display, lines,
+                            "@jax.jit on a def inside a function body re-lowers "
+                            "on every enclosing call; hoist to module level or "
+                            "cache (functools.lru_cache / a keyed cache dict)",
+                        )
+                continue
+            if isinstance(node, ast.Call) and dotted_name(node.func) in _JIT_NAMES:
+                for kw in node.keywords:
+                    if kw.arg in ("static_argnums", "static_argnames"):
+                        static_jits.append((node, kw.arg))
+                if id(node) not in cached_calls:
+                    _emit_free(
+                        findings, proj, fn, node, "JS201", display, lines,
+                        "jax.jit(...) constructed inside a function body — a "
+                        "fresh compiled callable per call/instance re-lowers "
+                        "every time; hoist to module level or cache it "
+                        "(functools.lru_cache / self._jitted[key] idiom)",
+                    )
+        for node, _ in static_jits:
+            _check_static_args(proj, fn, node, findings, display, lines)
+    # module-level jit assignments with static args: check defaults + callsites
+    for mod in proj.modules.values():
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                if dotted_name(call.func) in _JIT_NAMES and any(
+                    kw.arg in ("static_argnums", "static_argnames") for kw in call.keywords
+                ):
+                    fake = mod.functions.get("<module>")
+                    _check_static_args(proj, fake, call, findings, display, lines,
+                                       module=mod)
+
+
+def _emit_free(findings, proj, fn, node, rule, display, lines, message, module=None):
+    mod_name = fn.module if fn is not None else module.name
+    path = (proj.modules[mod_name].path if mod_name in proj.modules else "<unknown>")
+    src = lines.get(mod_name, [])
+    line = getattr(node, "lineno", 1)
+    snippet = src[line - 1].strip() if 0 < line <= len(src) else ""
+    findings.append(
+        Finding(
+            rule=rule, severity=RULES[rule][0], path=display.get(mod_name, path),
+            module=mod_name, qualname=fn.qualname if fn else "<module>",
+            line=line, col=getattr(node, "col_offset", 0),
+            message=message, snippet=snippet,
+        )
+    )
+
+
+def _check_static_args(proj, fn, call: ast.Call, findings, display, lines, module=None):
+    """JS202: inspect the jitted target's defaults for the static params."""
+    mod_name = fn.module if fn is not None else module.name
+    static_names: set[str] = set()
+    static_nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    static_names.add(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+                    static_nums.add(sub.value)
+    if not call.args:
+        return
+    target_name = dotted_name(call.args[0])
+    if not target_name:
+        return
+    caller = fn if fn is not None and fn.qualname != "<module>" else None
+    key = _resolve_name(proj, caller, mod_name, target_name)
+    if key is None or key not in proj.functions:
+        return
+    target = proj.functions[key].node
+    args = target.args
+    pos = list(args.posonlyargs) + list(args.args)
+    defaults = list(args.defaults)
+    # align defaults to the tail of positional args
+    offset = len(pos) - len(defaults)
+    for i, a in enumerate(pos):
+        if a.arg in static_names or i in static_nums:
+            d = defaults[i - offset] if i >= offset else None
+            if d is not None and isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                _emit_free(
+                    findings, proj, proj.functions[key], d, "JS202", display, lines,
+                    f"static arg {a.arg!r} has a non-hashable default — "
+                    "jax.jit static args must be hashable (tuple, str, int)",
+                )
+            elif d is not None and isinstance(d, ast.Call):
+                dn = dotted_name(d.func) or ""
+                if dn.split(".")[0] in ("np", "numpy", "jnp", "jax"):
+                    _emit_free(
+                        findings, proj, proj.functions[key], d, "JS202", display, lines,
+                        f"static arg {a.arg!r} defaults to an array — array-"
+                        "valued static args retrace per value (or fail to hash)",
+                    )
+
+
+def _lint_host_solver_reachability(
+    ctx: _CompiledContext, findings: list[Finding], display, lines
+) -> None:
+    proj = ctx.proj
+    for key in sorted(ctx.compiled):
+        fn = proj.functions[key]
+        for callee in sorted(fn.resolved):
+            if callee in _HOST_SOLVER_KEYS or callee.split(":")[-1].split(".")[-1] in _HOST_SOLVER_NAMES:
+                node = _call_node(fn, callee.split(":")[-1].split(".")[-1]) or fn.node
+                _emit_free(
+                    findings, proj, fn, node, "JS301", display, lines,
+                    f"host solver {callee.split(':')[-1]!r} is reachable from "
+                    "compiled-step code — LP/NNLS solves belong on the host "
+                    "prelude (ResilienceSession.recovery), the compiled step "
+                    "must use jax_recovery_masked",
+                )
+        solver_callees = {
+            c.split(":")[-1].split(".")[-1] for c in fn.resolved
+        }  # avoid double-reporting calls the resolved pass already flagged
+        for raw in sorted(fn.calls):
+            last = raw.split(".")[-1]
+            if last in _HOST_SOLVER_NAMES and last not in solver_callees:
+                node = _call_node(fn, last) or fn.node
+                _emit_free(
+                    findings, proj, fn, node, "JS301", display, lines,
+                    f"host solver {last!r} called from compiled-step code — "
+                    "LP/NNLS solves belong on the host prelude "
+                    "(ResilienceSession.recovery), the compiled step must use "
+                    "jax_recovery_masked",
+                )
+                continue
+            if _HOST_SOLVER_PATTERNS.match(raw):
+                node = _call_node(fn, raw.split(".")[-1]) or fn.node
+                _emit_free(
+                    findings, proj, fn, node, "JS301", display, lines,
+                    f"host solver call {raw!r} inside compiled-step code",
+                )
+
+
+def _call_node(fn: FunctionInfo, last_component: str) -> Optional[ast.AST]:
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name and name.split(".")[-1] == last_component:
+                return node
+    return None
+
+
+def _suppressions(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def lint_project(proj: Project, *, display_paths: Optional[dict[str, str]] = None) -> list[Finding]:
+    """Run every Layer-1 rule over a loaded Project; returns unsuppressed
+    findings sorted by (path, line)."""
+    display = display_paths or {m.name: m.path for m in proj.modules.values()}
+    lines = {m.name: m.source.splitlines() for m in proj.modules.values()}
+    ctx = _CompiledContext(proj)
+    findings: list[Finding] = []
+
+    for key in sorted(ctx.compiled):
+        fn = proj.functions[key]
+        _FunctionLinter(
+            fn, mode="compiled", findings=findings,
+            source_lines=lines[fn.module], display_path=display[fn.module],
+        ).run()
+    for key, kind in sorted(ctx.kinds.items()):
+        if kind == "host" and key in proj.functions:
+            fn = proj.functions[key]
+            _FunctionLinter(
+                fn, mode="host", findings=findings,
+                source_lines=lines[fn.module], display_path=display[fn.module],
+            ).run()
+    _lint_jit_in_body(proj, findings, display, lines)
+    _lint_host_solver_reachability(ctx, findings, display, lines)
+
+    # inline suppressions
+    sup = {m.name: _suppressions(m.source) for m in proj.modules.values()}
+    kept = [
+        f for f in findings
+        if f.rule not in sup.get(f.module, {}).get(f.line, set())
+    ]
+    # dedupe (a call can be reachable through several rule walks)
+    seen: set[tuple] = set()
+    uniq = []
+    for f in sorted(kept, key=lambda f: (f.path, f.line, f.rule, f.col)):
+        k = (f.rule, f.module, f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(f)
+    return uniq
+
+
+def lint_paths(paths: Iterable[str]) -> list[Finding]:
+    proj = load_project(paths)
+    return lint_project(proj)
+
+
+def lint_source(source: str, *, module: str = "fixture", path: str = "<fixture>") -> list[Finding]:
+    """Lint a source string (test fixtures)."""
+    proj = Project()
+    proj.add_module(module, path, source)
+    proj.resolve_all()
+    return lint_project(proj, display_paths={module: path})

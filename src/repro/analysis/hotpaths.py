@@ -1,0 +1,157 @@
+"""The registered compiled hot paths the jaxpr/HLO audit traces.
+
+Each :class:`HotPathSpec` binds a ``@compiled_path`` registry name to a
+concrete, *small* instantiation of that path: the raw (unjitted) callable the
+production code jits, plus the declared shape buckets it is compiled for.
+The audit (:mod:`repro.analysis.jaxpr_audit`) then proves three properties
+per path without running a single production step:
+
+* the traced jaxpr contains **zero host callbacks**;
+* the lowered module contains **zero host-transfer ops**;
+* each declared shape bucket traces **exactly once** (two calls per bucket,
+  one trace each — i.e. shapes inside a bucket are fixed, and nothing in the
+  step is shape- or value-dependent in a way that forces a retrace).
+
+The three paths mirror the repo's three hot loops (ROADMAP tier-1 surface):
+
+``train.train_step``
+    The full loss → grad → AdamW step (tiny model config — the audit checks
+    structure, not numerics; the program's op mix is config-independent).
+``local.masked_reduce``
+    The fused mask → on-device recovery solve → Lemma-3 combine step that
+    :meth:`repro.core.executor.LocalExecutor.resilient_reduce_masked` jits —
+    the paper's recovery moved inside the compiled program.
+``query.assign_min``
+    The streaming layer's nearest-center dispatch
+    (:func:`repro.stream.query._assign_run`), bucketed by padded batch size.
+
+Specs deliberately build the RAW callables (``_masked_step_raw``,
+``_assign_run``, ``make_train_step``'s product) — the same objects production
+wraps in ``jax.jit`` — so what the audit traces IS what the hot path runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+__all__ = ["HotPathSpec", "hot_path_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HotPathSpec:
+    """One auditable hot path.
+
+    ``build()`` returns ``(fn, buckets)`` where ``fn`` is the raw callable
+    and ``buckets`` is a sequence of ``(label, args)`` pairs — one concrete
+    argument tuple per declared shape bucket.  Calling ``fn(*args)`` for any
+    bucket must be valid both traced and concrete.
+    """
+
+    name: str               # audit display name
+    registry_name: str      # must exist in repro.analysis.registry after build
+    description: str
+    build: Callable[[], tuple]
+
+
+def _build_train_step():
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs.qwen3_4b import smoke_config
+    from ..models import transformer as T
+    from ..train.optimizer import AdamWConfig
+    from ..train.train_step import init_train_state, make_train_step
+
+    cfg = dc.replace(
+        smoke_config(), n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, head_dim=16, vocab=64,
+    ).validate()
+    ctx = T.ModelContext()
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = make_train_step(cfg, ctx, AdamWConfig(), donate=False)
+    rng = np.random.default_rng(0)
+
+    def batch(n_tok: int, seq: int):
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (n_tok, seq)), jnp.int32),
+            "group_weights": jnp.ones((4,), jnp.float32),
+        }
+
+    buckets = [
+        ("b8xt16", (state, batch(8, 16))),
+        ("b16xt16", (state, batch(16, 16))),
+    ]
+    return step, buckets
+
+
+def _build_masked_reduce():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.assignment import cyclic_assignment
+    from ..core.executor import LocalExecutor
+    from ..core.kmeans import _local_cost_fn
+
+    ex = LocalExecutor()
+    fn = _local_cost_fn(False, "auto")
+    step = ex._masked_step_raw(fn, n_node=2, n_bcast=1, iters=8)
+    A = jnp.asarray(cyclic_assignment(8, 4, 2).matrix, jnp.float32)
+    alive = jnp.asarray(np.array([True, True, True, False]))
+    use_ov = jnp.asarray(False)
+    b_ov = jnp.zeros((4,), jnp.float32)
+    rng = np.random.default_rng(1)
+    centers = jnp.asarray(rng.normal(size=(3, 5)), jnp.float32)
+
+    def bucket(m: int):
+        xs = jnp.asarray(rng.normal(size=(4, m, 5)), jnp.float32)
+        ws = jnp.ones((4, m), jnp.float32)
+        return (A, alive, use_ov, b_ov, xs, ws, centers)
+
+    buckets = [("m8", bucket(8)), ("m16", bucket(16))]
+    return step, buckets
+
+
+def _build_query_assign():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..stream.query import _assign_run
+
+    run = _assign_run("auto")
+    rng = np.random.default_rng(2)
+    c = jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)
+
+    def bucket(n: int):
+        q = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+        return (q, c)
+
+    buckets = [("q64", bucket(64)), ("q128", bucket(128))]
+    return run, buckets
+
+
+def hot_path_specs() -> Sequence[HotPathSpec]:
+    """The three registered hot paths, in tier order."""
+    return (
+        HotPathSpec(
+            name="train_step",
+            registry_name="train.train_step",
+            description="loss → grad → AdamW compiled train step (tiny config)",
+            build=_build_train_step,
+        ),
+        HotPathSpec(
+            name="masked_reduce",
+            registry_name="local.masked_reduce",
+            description="fused on-device recovery solve + Lemma-3 combine",
+            build=_build_masked_reduce,
+        ),
+        HotPathSpec(
+            name="query_assign",
+            registry_name="query.assign_min",
+            description="streaming nearest-center dispatch (bucketed batches)",
+            build=_build_query_assign,
+        ),
+    )

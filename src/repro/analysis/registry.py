@@ -1,0 +1,96 @@
+"""The ``@compiled_path`` registry — declaring the compiled-step contract.
+
+Production code marks the functions that make up (or produce, or drive) the
+compiled hot paths; both analyzer layers key off the markers:
+
+* the AST linter treats marked code as *compiled context* and lints it (and
+  everything reachable from it through the project call graph) under the
+  zero-host-work rules;
+* the jaxpr audit cross-checks that every registered hot path is actually
+  auditable (see :mod:`repro.analysis.hotpaths`).
+
+Three kinds, because compiled code enters the repo three ways:
+
+``kind="step"``
+    The decorated function's own body IS traced code (it runs under
+    ``jax.jit`` / ``vmap`` / ``shard_map`` / ``grad``).  Example:
+    :func:`repro.core.recovery.jax_recovery_masked`.
+``kind="factory"``
+    The function's body is host-side setup that *defines* the traced code:
+    its nested ``def``s are compiled context, its own top-level statements
+    are not.  Example: :func:`repro.train.train_step.make_train_step`.
+``kind="host"``
+    Host-side hot-path orchestration wrapped around a compiled step (the
+    per-step driver).  Not traced — but every per-value device→host sync
+    here is a blocking round-trip on the serving/training hot path, so the
+    linter holds it to the one-``jax.device_get``-per-step discipline.
+    Example: :meth:`repro.train.trainer.Trainer._device_recovery_step`.
+
+The decorator is metadata-only (no wrapping, zero runtime overhead, no jax
+import) — safe to apply anywhere in ``repro.*``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+__all__ = ["CompiledPathInfo", "compiled_path", "registered_paths"]
+
+KINDS = ("step", "factory", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPathInfo:
+    name: str      # registry key (defaults to module.qualname)
+    kind: str      # "step" | "factory" | "host"
+    module: str
+    qualname: str
+
+
+_REGISTRY: dict[str, CompiledPathInfo] = {}
+
+
+def compiled_path(
+    name: Union[None, str, Callable] = None, *, kind: str = "step"
+) -> Callable:
+    """Register a function as part of the compiled-step contract.
+
+    Usable bare (``@compiled_path``) or parameterized
+    (``@compiled_path("train_step", kind="factory")``).  Returns the
+    function unchanged apart from a ``__compiled_path__`` attribute.
+    """
+    if callable(name):  # bare @compiled_path
+        return compiled_path(None, kind=kind)(name)
+    if kind not in KINDS:
+        raise ValueError(f"compiled_path kind must be one of {KINDS}, got {kind!r}")
+
+    def deco(fn: Callable) -> Callable:
+        path_name = name or f"{fn.__module__}.{fn.__qualname__}"
+        info = CompiledPathInfo(
+            name=path_name, kind=kind,
+            module=fn.__module__, qualname=fn.__qualname__,
+        )
+        prev = _REGISTRY.get(path_name)
+        if prev is not None and (prev.module, prev.qualname) != (info.module, info.qualname):
+            raise ValueError(
+                f"compiled_path name {path_name!r} already registered by "
+                f"{prev.module}.{prev.qualname}"
+            )
+        _REGISTRY[path_name] = info
+        try:
+            fn.__compiled_path__ = info
+        except (AttributeError, TypeError):  # pragma: no cover - builtins
+            pass
+        return fn
+
+    return deco
+
+
+def registered_paths(kind: Optional[str] = None) -> dict[str, CompiledPathInfo]:
+    """Snapshot of the registry (optionally filtered by kind).  Only paths
+    whose defining modules have been imported are visible — the AST linter
+    discovers markers syntactically instead, so it never needs imports."""
+    if kind is None:
+        return dict(_REGISTRY)
+    return {k: v for k, v in _REGISTRY.items() if v.kind == kind}

@@ -32,6 +32,7 @@ from typing import Any, Callable, Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from ..analysis import compiled_path
 from .aggregation import resilient_sum
 from .recovery import jax_recovery_masked
 
@@ -87,6 +88,7 @@ class Executor:
         alive,
         *,
         iters: int = 300,
+        b_override=None,
     ):
         """Lemma-3 combine with the recovery weights solved ON DEVICE.
 
@@ -97,6 +99,13 @@ class Executor:
         solves and zero recompiles.  Returns ``(reduced, b_full)``; the
         weights come back so callers can parity-check against the host LP
         without a second solve.
+
+        ``b_override`` (optional ``(s,)`` weights) routes the combine through
+        caller-supplied weights instead of the on-device solve — as *runtime
+        data* through the SAME compiled program (a ``jnp.where`` select on a
+        runtime flag).  This is how degenerate patterns fall back to host
+        best-effort weights without compiling a second full program for the
+        fallback path.
         """
         raise NotImplementedError
 
@@ -160,27 +169,47 @@ class LocalExecutor(Executor):
         per_node = self.map_nodes(fn, node_args, broadcast_args)
         return resilient_sum(per_node, jnp.asarray(b_full, jnp.float32))
 
+    @compiled_path("local.masked_reduce", kind="factory")
+    def _masked_step_raw(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
+        """The UNCOMPILED fused step — solve → select → combine.  Exposed
+        separately from :meth:`_compiled_masked` so the Layer-2 jaxpr audit
+        (:mod:`repro.analysis.jaxpr_audit`) can trace and instrument the raw
+        python callable the hot path actually jits."""
+        in_axes = (0,) * n_node + (None,) * n_bcast
+        inner = jax.vmap(fn, in_axes=in_axes)
+
+        def step(A, alive, use_override, b_override, *args):
+            solved = jax_recovery_masked(A, alive, iters=iters)
+            # The override is runtime data, not a branch: degenerate-pattern
+            # fallbacks flow through THIS program with use_override=True
+            # instead of compiling a second full program.
+            b_full = jnp.where(use_override, b_override, solved)
+            per_node = inner(*args)
+            return resilient_sum(per_node, b_full), b_full
+
+        return step
+
     def _compiled_masked(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
         key = ("masked", fn, n_node, n_bcast, iters)
         if key not in self._jitted:
-            in_axes = (0,) * n_node + (None,) * n_bcast
-            inner = jax.vmap(fn, in_axes=in_axes)
-
-            def step(A, alive, *args):
-                b_full = jax_recovery_masked(A, alive, iters=iters)
-                per_node = inner(*args)
-                return resilient_sum(per_node, b_full), b_full
-
-            self._jitted[key] = jax.jit(step)
+            self._jitted[key] = jax.jit(self._masked_step_raw(fn, n_node, n_bcast, iters))
         return self._jitted[key]
 
     def resilient_reduce_masked(
-        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300
+        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300,
+        b_override=None,
     ):
         node_args = tuple(jnp.asarray(a) for a in node_args)
         broadcast_args = tuple(_as_jax_tree(a) for a in broadcast_args)
+        A = jnp.asarray(A, jnp.float32)
+        use_ov = jnp.asarray(b_override is not None)
+        b_ov = (
+            jnp.zeros((A.shape[0],), jnp.float32)
+            if b_override is None
+            else jnp.asarray(b_override, jnp.float32)
+        )
         return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
-            jnp.asarray(A, jnp.float32), jnp.asarray(alive, bool),
+            A, jnp.asarray(alive, bool), use_ov, b_ov,
             *node_args, *broadcast_args,
         )
 

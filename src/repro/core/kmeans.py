@@ -18,6 +18,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis import compiled_path
 from ..kernels.pairwise_dist import ops as pd
 from ..kernels.weighted_segsum import ops as ss
 
@@ -146,6 +147,7 @@ def clustering_cost(x, centers, *, weights=None, median: bool = False, impl: str
 
 
 @functools.lru_cache(maxsize=None)
+@compiled_path("kmeans.local_cost", kind="factory")
 def _local_cost_fn(median: bool, impl: str):
     """Per-node shard cost against a broadcast center set (Lemma-3 ``f``)."""
 

@@ -32,6 +32,7 @@ from typing import Optional, Union
 
 import numpy as np
 
+from ..analysis import compiled_path
 from .assignment import Assignment
 
 __all__ = [
@@ -180,6 +181,7 @@ def nnls_recovery(
     return _result(A, alive_idx, b, "nnls")
 
 
+@compiled_path("recovery.jax", kind="step")
 def jax_recovery(A_R, *, iters: int = 500, lr: float = 1.0):
     """On-device projected-gradient recovery (beyond paper).
 
@@ -217,6 +219,7 @@ def jax_recovery(A_R, *, iters: int = 500, lr: float = 1.0):
     return jnp.where(amin > 1e-12, b / amin, b)
 
 
+@compiled_path("recovery.jax_masked", kind="step")
 def jax_recovery_masked(A, alive, *, iters: int = 300, lr: float = 1.0):
     """Fixed-shape on-device recovery from a runtime alive mask.
 

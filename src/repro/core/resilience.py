@@ -38,7 +38,8 @@ from typing import Optional, Union
 
 import numpy as np
 
-from .assignment import Assignment
+from ..analysis import compiled_path
+from .assignment import Assignment, cyclic_assignment
 from .executor import Executor, get_executor
 from .recovery import RecoveryResult, solve_recovery
 
@@ -78,6 +79,8 @@ class SessionStats:
     cache_hits: int = 0        # pattern-cache hits across ALL consumers
     coverage_checks: int = 0   # per-pattern coverage validations COMPUTED
     elastic_patches: int = 0   # assignment patches applied
+    reshards: int = 0          # full survivor re-shards (permanent loss broke
+                               # coverage; the whole assignment was rebuilt)
     moved_node_blocks: int = 0 # node rows re-placed incrementally
     full_repacks: int = 0      # patches that forced a FULL re-place (capacity
                                # overflow) instead of moved-rows-only surgery
@@ -123,6 +126,9 @@ class ResilienceSession:
         # it is keyed and invalidated like _coverage but seeded on its own.
         self._covers: dict[bytes, bool] = {}
         self._streak = np.zeros(assignment.num_nodes, dtype=np.int64)
+        # Nodes declared PERMANENTLY lost (vs. transient stragglers, which
+        # are per-round mask entries) — see permanent_loss()/permanent_join().
+        self._permanent_dead: set[int] = set()
         # Patch listeners: consumers that keep their OWN device-resident
         # node-stacked state (the trainer's token blocks, a streaming
         # bucket store) register a callback(moved_nodes, old_m, new_m) and
@@ -291,6 +297,7 @@ class ResilienceSession:
         self._resident_version = self.version
         return self._resident
 
+    @compiled_path("session.step_cost", kind="host")
     def step_cost(
         self,
         points,
@@ -311,6 +318,7 @@ class ResilienceSession:
             # all-straggler round is indistinguishable from a perfect result.
             raise ValueError("no surviving nodes with data — cannot form union")
         xs_p, ws_p, A_p = self._ensure_resident(points)
+        import jax
         import jax.numpy as jnp
 
         est, _b = self.executor.resilient_reduce_masked(
@@ -322,13 +330,16 @@ class ResilienceSession:
             iters=self.device_iters,
         )
         self.stats.device_solves += 1
-        return float(est)
+        # The scalar estimate is this call's one sanctioned device→host sync.
+        return float(jax.device_get(est))
 
     def device_recovery_weights(self, alive) -> np.ndarray:
         """(s,) b_full from the on-device solver (no host LP).  Standalone
         form of the solve that :meth:`step_cost` fuses into its step — used
         by consumers that need the weights themselves (e.g. gradient
         reweighting) without a host round-trip on unseen patterns."""
+        import jax
+
         from .recovery import jax_recovery_masked
 
         b = jax_recovery_masked(
@@ -337,7 +348,9 @@ class ResilienceSession:
             iters=self.device_iters,
         )
         self.stats.device_solves += 1
-        return np.asarray(b)
+        # device_get, not np.asarray: the weights ARE the requested output,
+        # fetched once (np.asarray would be an equivalent but implicit sync).
+        return jax.device_get(b)
 
     # ------------------------------------------------- algorithm entry points
 
@@ -452,6 +465,98 @@ class ResilienceSession:
         use this to re-place only the moved node rows
         (``Executor.update_node_rows``)."""
         self._patch_listeners.append(cb)
+
+    # ------------------------------------------ permanent loss / resharding
+    # A PERMANENT loss is a different event from a per-round straggle: the
+    # node is gone, its replicas are gone, and the session must decide once
+    # (not per step) whether the survivor set still covers every shard.
+    # Folded in from train.elastic so the reshard shares this session's
+    # recovery cache, lineage tracking, stats, and patch listeners instead
+    # of a parallel bookkeeping stack in the training layer.
+
+    @property
+    def permanent_dead(self) -> frozenset:
+        """Nodes declared permanently lost (never counted alive again until
+        :meth:`permanent_join`)."""
+        return frozenset(self._permanent_dead)
+
+    def alive_mask(self, transient_dead=None) -> np.ndarray:
+        """(n,) bool: False at permanently-dead nodes, and additionally at
+        ``transient_dead`` (a mask or an iterable of node ids) this round."""
+        mask = np.ones(self.num_nodes, dtype=bool)
+        for i in self._permanent_dead:
+            mask[i] = False
+        if transient_dead is not None:
+            td = np.asarray(transient_dead)
+            if td.dtype == bool:
+                mask &= ~td
+            else:
+                for i in td.reshape(-1):
+                    mask[int(i)] = False
+        return mask
+
+    def permanent_join(self, node: int) -> None:
+        """A (re)joining node takes over the dead slot's shard set — warm
+        takeover: batch shapes are unchanged, so no reshard is needed."""
+        self._permanent_dead.discard(int(node))
+
+    def permanent_loss(self, node: int) -> RecoveryResult:
+        """Declare ``node`` permanently lost; re-solve over the survivors
+        ONCE (cached — subsequent step weights reuse the entry) and, if the
+        loss broke coverage, reshard the survivors.  Returns the recovery
+        result for the post-loss (post-reshard, if any) survivor pattern."""
+        self._permanent_dead.add(int(node))
+        alive = self.alive_mask()
+        res = self.recovery(alive)
+        if len(res.uncovered) > 0:
+            self._reshard_survivors(alive)
+            res = self.recovery(self.alive_mask())
+        return res
+
+    def _reshard_survivors(self, alive: np.ndarray) -> None:
+        """Coverage lost: rebuild the assignment over surviving nodes.
+
+        Shard count and node count are preserved (static shapes); survivors
+        take over the uncovered shards via a fresh cyclic assignment whose
+        rows for dead nodes are rotated onto the nearest alive row and
+        zeroed (dead slots keep producing weight-0 placeholder data until
+        physically replaced).  Loads are no longer perfectly balanced after
+        takeover; that is the price of elasticity until the next full
+        re-shard.
+        """
+        n_alive = int(np.asarray(alive, dtype=bool).sum())
+        if n_alive == 0:
+            raise ValueError("cannot reshard: no surviving nodes")
+        ell = min(max(2, int(self.assignment.params.get("ell", 2))), n_alive)
+        fresh = cyclic_assignment(self.num_shards, self.num_nodes, int(ell))
+        mat = fresh.matrix.copy()
+        alive_idx = np.flatnonzero(alive)
+        for dead in np.flatnonzero(~np.asarray(alive, dtype=bool)):
+            take = alive_idx[dead % len(alive_idx)]
+            mat[take] |= mat[dead]
+            mat[dead] = 0
+        old = self.assignment.matrix
+        old_m = int(old.sum(axis=1).max())
+        self.assignment = dataclasses.replace(
+            fresh, matrix=mat, scheme="elastic_cyclic"
+        )
+        self._assignment_lineage.add(id(self.assignment))
+        # The whole matrix changed: every cached pattern, pack, and resident
+        # placement is stale (unlike _patch's selective invalidation).
+        self.stats.cache_invalidations += len(self._cache)
+        self._cache.clear()
+        self._coverage.clear()
+        self._covers.clear()
+        self._packed = None
+        self._pack_version = -1
+        self._resident = None
+        self._resident_version = -1
+        self.stats.reshards += 1
+        self.version += 1
+        changed = np.flatnonzero((old != self.assignment.matrix).any(axis=1))
+        new_m = int(self.assignment.matrix.sum(axis=1).max())
+        for cb in self._patch_listeners:
+            cb(changed.tolist(), old_m, new_m)
 
     def _invalidate_patterns(self, moved_nodes: list[int]) -> None:
         """Drop ONLY the cache entries the patch can change.

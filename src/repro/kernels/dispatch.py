@@ -431,7 +431,8 @@ def _time_once(fn: Callable[[], Any], *, reps: int = 3) -> float:
     caller's jaxpr — perf_counter would measure trace construction, not
     execution.
     """
-    run = jax.jit(fn)
+    # Benchmarking jit: one-shot by design, under ensure_compile_time_eval.
+    run = jax.jit(fn)  # repro-lint: disable=JS201
     times = []
     for _ in range(reps + 1):  # first rep warms up / compiles
         t0 = time.perf_counter()

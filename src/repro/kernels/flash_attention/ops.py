@@ -189,9 +189,10 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None, impl="auto
         return _flash_attention_jit_dynscale(
             q, k, v, scale, causal=causal, window=window, impl=name
         )
-    # float() also accepts 0-d arrays / numpy scalars.
+    # float() also accepts 0-d arrays / numpy scalars; the Tracer case was
+    # routed to the dynamic-scale impl above, so this cast never syncs.
     return _flash_attention_jit(
-        q, k, v, causal=causal, window=window, scale=float(scale), impl=name
+        q, k, v, causal=causal, window=window, scale=float(scale), impl=name  # repro-lint: disable=JS101
     )
 
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..analysis import compiled_path
 from ..core.aggregation import resilient_psum, resilient_sum
 from ..core.executor import Executor
 from ..core.recovery import jax_recovery_masked
@@ -106,6 +107,7 @@ class MeshExecutor(Executor):
             out.append(jnp.pad(a, widths))
         return tuple(out), s
 
+    @compiled_path("mesh.map_reduce", kind="factory")
     def _compiled(self, fn: Callable, n_node: int, n_bcast: int, reduce_: bool):
         key = (fn, n_node, n_bcast, reduce_)
         if key in self._jitted:
@@ -156,6 +158,28 @@ class MeshExecutor(Executor):
             *node_args, *broadcast_args
         )
 
+    @compiled_path("mesh.masked_reduce", kind="factory")
+    def _masked_step_raw(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
+        """The UNCOMPILED fused per-device step (must run under shard_map) —
+        exposed for the Layer-2 jaxpr audit, same contract as
+        :meth:`repro.core.executor.LocalExecutor._masked_step_raw`."""
+        in_axes = (0,) * n_node + (None,) * n_bcast
+        inner = jax.vmap(fn, in_axes=in_axes)
+
+        def step(A, alive, use_override, b_override, *args):
+            solved = jax_recovery_masked(A, alive, iters=iters)
+            # Runtime select, not a Python branch: the fallback path shares
+            # this one compiled program (see Executor.resilient_reduce_masked).
+            b_full = jnp.where(use_override, b_override, solved)
+            per_node = inner(*args)
+            blk = args[0].shape[0]  # this device's node-block size (static)
+            i = jax.lax.axis_index(NODE_AXIS)
+            b_blk = jax.lax.dynamic_slice(b_full, (i * blk,), (blk,))
+            local = resilient_sum(per_node, b_blk)
+            return resilient_psum(local, jnp.float32(1.0), NODE_AXIS), b_full
+
+        return step
+
     def _compiled_masked(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
         """Fused mask → on-device recovery solve → Lemma-3 psum.
 
@@ -167,19 +191,8 @@ class MeshExecutor(Executor):
         key = ("masked", fn, n_node, n_bcast, iters)
         if key in self._jitted:
             return self._jitted[key]
-        in_axes = (0,) * n_node + (None,) * n_bcast
-        inner = jax.vmap(fn, in_axes=in_axes)
-
-        def step(A, alive, *args):
-            b_full = jax_recovery_masked(A, alive, iters=iters)
-            per_node = inner(*args)
-            blk = args[0].shape[0]  # this device's node-block size (static)
-            i = jax.lax.axis_index(NODE_AXIS)
-            b_blk = jax.lax.dynamic_slice(b_full, (i * blk,), (blk,))
-            local = resilient_sum(per_node, b_blk)
-            return resilient_psum(local, jnp.float32(1.0), NODE_AXIS), b_full
-
-        in_specs = (P(), P()) + (P(NODE_AXIS),) * n_node + (P(),) * n_bcast
+        step = self._masked_step_raw(fn, n_node, n_bcast, iters)
+        in_specs = (P(), P(), P(), P()) + (P(NODE_AXIS),) * n_node + (P(),) * n_bcast
         out_specs = (P(), P())
         sharded = shard_map(
             step, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
@@ -189,20 +202,29 @@ class MeshExecutor(Executor):
         return self._jitted[key]
 
     def resilient_reduce_masked(
-        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300
+        self, fn, node_args, broadcast_args, A, alive, *, iters: int = 300,
+        b_override=None,
     ):
         node_args, _ = self._pad_nodes(tuple(node_args))
         s_pad = int(jnp.shape(node_args[0])[0])
         A = jnp.asarray(A, jnp.float32)
         alive = jnp.asarray(alive, bool)
+        use_ov = jnp.asarray(b_override is not None)
+        b_ov = (
+            jnp.zeros((A.shape[0],), jnp.float32)
+            if b_override is None
+            else jnp.asarray(b_override, jnp.float32)
+        )
         pad = s_pad - A.shape[0]
         if pad:  # padded node rows: no shards, never alive → b pinned to 0
             A = jnp.pad(A, ((0, pad), (0, 0)))
             alive = jnp.pad(alive, (0, pad))
+            b_ov = jnp.pad(b_ov, (0, pad))
         node_args = tuple(self._place(a, P(NODE_AXIS)) for a in node_args)
         broadcast_args = tuple(self._place(a, P()) for a in broadcast_args)
         return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
             self._place(A, P()), self._place(alive, P()),
+            self._place(use_ov, P()), self._place(b_ov, P()),
             *node_args, *broadcast_args,
         )
 

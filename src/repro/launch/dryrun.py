@@ -96,7 +96,8 @@ def lower_cell(
             cfg, ctx, AdamWConfig(), accum_steps=accum_steps,
             num_groups=_num_groups(mesh),
         )
-        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
+        # Introspection tool: each dry-run lowers once, on purpose.
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))  # repro-lint: disable=JS201
         lowered = jitted.lower(state_struct, specs)
     elif shape.kind == "prefill":
         specs = input_specs(cfg, shape)
@@ -109,7 +110,7 @@ def lower_cell(
         def prefill_fn(params, batch):
             return T.prefill(params, batch, cfg, ctx)
 
-        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))  # repro-lint: disable=JS201
         lowered = jitted.lower(params_struct, specs)
     else:  # decode
         specs = input_specs(cfg, shape)
@@ -127,7 +128,7 @@ def lower_cell(
         def decode_fn(params, cache, tok, cur):
             return T.decode_step(params, cache, tok, cur, cfg, ctx)
 
-        jitted = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, tok_sh, None))
+        jitted = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, tok_sh, None))  # repro-lint: disable=JS201
         lowered = jitted.lower(
             params_struct, cache_struct, specs["tokens_t"], specs["cur_len"]
         )

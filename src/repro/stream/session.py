@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import compiled_path
 from ..core import kmeans
 from ..core.assignment import make_assignment
 from ..core.executor import Executor
@@ -233,6 +234,7 @@ class StreamingSession:
             "version": self._version,
         }
 
+    @compiled_path("stream.query", kind="host")
     def query(self, queries) -> QueryResult:
         """Nearest-center / membership answers with a staleness bound.
         Solves once automatically if no model exists yet."""

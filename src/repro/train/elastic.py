@@ -4,13 +4,22 @@ Static-shape SPMD cannot change the mesh mid-run, so elasticity is expressed
 at the *group* layer (the same place the paper's redundancy lives):
 
 * a transiently-straggling group gets weight 0 for the step (Lemma 3 path);
-* a group declared PERMANENTLY dead is excluded from the plan — the manager
+* a group declared PERMANENTLY dead is excluded from the plan — the session
   re-solves the recovery LP over the survivor set once (not per step) and, if
   coverage is lost, regenerates the assignment over the survivors (a data
   re-shuffle, not a recompilation: batch shapes are unchanged — dead groups
   keep producing placeholder microbatches with weight 0 until the next
   scheduled re-shard);
 * a joining group is assigned the shard set of a dead slot (warm takeover).
+
+The mechanics live in :class:`repro.core.resilience.ResilienceSession`
+(``permanent_loss`` / ``permanent_join`` / ``_reshard_survivors``) — the same
+object that owns the recovery cache, assignment lineage, and patch listeners,
+so a reshard invalidates exactly the state a patch would.  This manager is
+the training-layer facade: it tracks the plan rebinding a reshard forces
+(the plan's ``assignment`` field must follow the session's new matrix so
+load accounting — ``shards_per_group`` / ``max_load`` — reads the takeover
+matrix, not the original balanced construction).
 """
 
 from __future__ import annotations
@@ -21,7 +30,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.recovery import RecoveryResult
-from .resilient import RedundantShardPlan, make_plan
+from .resilient import RedundantShardPlan
 
 __all__ = ["ElasticGroupManager"]
 
@@ -29,26 +38,35 @@ __all__ = ["ElasticGroupManager"]
 @dataclasses.dataclass
 class ElasticGroupManager:
     plan: RedundantShardPlan
-    permanently_dead: set = dataclasses.field(default_factory=set)
-    reshard_count: int = 0
+
+    @property
+    def permanently_dead(self) -> set:
+        return set(self.plan.session.permanent_dead)
+
+    @property
+    def reshard_count(self) -> int:
+        return self.plan.session.stats.reshards
 
     def mark_dead(self, group: int) -> None:
-        self.permanently_dead.add(int(group))
-        alive = self.alive_mask()
-        res = self.plan.recovery(alive)
-        if len(res.uncovered) > 0:
-            self._reshard(alive)
+        session = self.plan.session
+        before = session.stats.reshards
+        session.permanent_loss(int(group))
+        if session.stats.reshards != before:
+            # The session resharded: its assignment object changed, and the
+            # plan's static-shape accounting must follow the takeover matrix.
+            # session.assignment IS the new assignment, so the plan/session
+            # identity contract holds by construction.
+            self.plan = RedundantShardPlan(
+                assignment=session.assignment,
+                num_groups=self.plan.num_groups,
+                session=session,
+            )
 
     def mark_joined(self, group: int) -> None:
-        self.permanently_dead.discard(int(group))
+        self.plan.session.permanent_join(int(group))
 
     def alive_mask(self, transient_stragglers: Optional[np.ndarray] = None) -> np.ndarray:
-        mask = np.ones(self.plan.num_groups, dtype=bool)
-        for g in self.permanently_dead:
-            mask[g] = False
-        if transient_stragglers is not None:
-            mask &= ~np.asarray(transient_stragglers, dtype=bool)
-        return mask
+        return self.plan.session.alive_mask(transient_stragglers)
 
     def step_weights(
         self, transient_stragglers: Optional[np.ndarray] = None
@@ -56,37 +74,3 @@ class ElasticGroupManager:
         """Per-step (G,) recovery weights over the CURRENT healthy set."""
         alive = self.alive_mask(transient_stragglers)
         return self.plan.group_weights(alive)
-
-    def _reshard(self, alive: np.ndarray) -> None:
-        """Coverage lost: rebuild the assignment over surviving groups.
-
-        Shard count and group count are preserved (static shapes); survivors
-        take over the uncovered shards via a fresh cyclic assignment whose
-        rows for dead groups are zeroed (they produce weight-0 placeholder
-        data until physically replaced).
-        """
-        n_alive = int(alive.sum())
-        ell = min(max(2, int(self.plan.assignment.params.get("ell", 2))), n_alive)
-        fresh = make_plan(
-            self.plan.num_groups,
-            self.plan.num_shards,
-            redundancy=int(ell),
-            scheme="cyclic",
-        )
-        mat = fresh.assignment.matrix.copy()
-        # Rotate assignments away from dead rows onto the nearest alive row.
-        alive_idx = np.flatnonzero(alive)
-        for dead in np.flatnonzero(~alive):
-            take = alive_idx[dead % len(alive_idx)]
-            mat[take] |= mat[dead]
-            mat[dead] = 0
-        # Loads are no longer perfectly balanced after takeover; that is the
-        # price of elasticity until the next full re-shard (the plan accepts
-        # unbalanced assignments — only shards_per_group raises on them).
-        self.plan = RedundantShardPlan(
-            assignment=dataclasses.replace(
-                fresh.assignment, matrix=mat, scheme="elastic_cyclic"
-            ),
-            num_groups=self.plan.num_groups,
-        )
-        self.reshard_count += 1

@@ -14,6 +14,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis import compiled_path
 from ..models import transformer as T
 from ..models.registry import ModelConfig
 from .compression import CompressionConfig, compress_with_error_feedback, init_ef_state
@@ -63,6 +64,7 @@ def _split_microbatches(batch: dict, accum: int, num_groups: int) -> dict:
     return out
 
 
+@compiled_path("train.train_step", kind="factory")
 def make_train_step(
     cfg: ModelConfig,
     ctx: T.ModelContext,
@@ -125,6 +127,7 @@ def make_train_step(
     return train_step
 
 
+@compiled_path("train.group_grad", kind="factory")
 def make_group_grad_fn(cfg: ModelConfig, ctx: T.ModelContext):
     """Per-group statistics function for ``Executor.resilient_reduce_masked``
     — the mesh-native resilient train step (Lemma 3 on gradients).
@@ -175,6 +178,7 @@ def make_group_grad_fn(cfg: ModelConfig, ctx: T.ModelContext):
     return group_stats
 
 
+@compiled_path("train.recovered_apply", kind="factory")
 def make_recovered_apply_fn(
     opt_cfg: AdamWConfig,
     num_shards: int,
@@ -210,6 +214,7 @@ def make_recovered_apply_fn(
     return apply
 
 
+@compiled_path("train.eval_step", kind="factory")
 def make_eval_step(cfg: ModelConfig, ctx: T.ModelContext):
     def eval_step(params, batch):
         loss, metrics = T.loss_fn(params, batch, cfg, ctx)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import compiled_path
 from ..core.resilience import ElasticPolicy, ResilienceSession
 from ..core.stragglers import StragglerScenario, make_scenario
 from ..data.pipeline import RedundantDataPipeline
@@ -222,6 +223,7 @@ class Trainer:
 
     # -------------------------------------------------- mesh-native step
 
+    @compiled_path("trainer.device_recovery_step", kind="host")
     def _device_recovery_step(
         self, state: TrainState, step: int, alive_t: np.ndarray
     ) -> tuple[TrainState, Optional[dict]]:
@@ -235,35 +237,42 @@ class Trainer:
         bcast = (state.params, pool_idx)
         covered = sess.pattern_covers(alive_t)
         if covered:
-            stats, b_dev = ex.resilient_reduce_masked(
-                self._group_fn, node_args, bcast, A, alive_t,
-                iters=sess.device_iters,
-            )
-            sess.stats.device_solves += 1
-            b_sum = float(jnp.asarray(b_dev).sum())
+            b_override = None
         else:
             # Degenerate pattern: host best-effort weights keep the covered
-            # shards' mass instead of silently dropping the lost ones.
+            # shards' mass instead of silently dropping the lost ones.  The
+            # weights ride through the SAME compiled program as runtime data
+            # (b_override) — the fallback never lowers a second full-model
+            # gradient program.
             w = self.plan.step_weights(alive_t)
             if not w.any():
                 return state, None  # every group straggled: skip the step
-            # The resident node args are already padded to the executor's
-            # node-axis length (mesh pads G up to a device-count multiple);
-            # the weight vector must match, or resilient_reduce would re-pad
-            # the node axis off the shorter weights and misalign the blocks.
-            w_pad = np.zeros(int(self._res_valid.shape[0]), np.float32)
-            w_pad[: len(w)] = w
-            stats = ex.resilient_reduce(self._group_fn, node_args, bcast, w_pad)
-            b_sum = float(w.sum())
+            b_override = w
+        stats, b_dev = ex.resilient_reduce_masked(
+            self._group_fn, node_args, bcast, A, alive_t,
+            iters=sess.device_iters, b_override=b_override,
+        )
+        if covered:
+            sess.stats.device_solves += 1
         state, metrics = self._apply_fn(state, stats)
+        # ONE blocking device→host transfer per step: every per-step scalar
+        # is fetched in a single device_get instead of a float() per metric.
+        host = jax.device_get(
+            {
+                "loss": metrics["loss"],
+                "ce": metrics["ce"],
+                "grad_norm": metrics["grad_norm"],
+                "b_sum": jnp.sum(b_dev),
+            }
+        )
         record = {
             "step": step,
-            "loss": float(metrics["loss"]),
-            "ce": float(metrics["ce"]),
-            "grad_norm": float(metrics["grad_norm"]),
+            "loss": float(host["loss"]),
+            "ce": float(host["ce"]),
+            "grad_norm": float(host["grad_norm"]),
             "stragglers": int((~alive_t).sum()),
             "fallback": not covered,
-            "b_sum": b_sum,
+            "b_sum": float(host["b_sum"]),
             "host_solves": sess.stats.host_solves,
             "device_solves": sess.stats.device_solves,
             "patches": sess.stats.elastic_patches,

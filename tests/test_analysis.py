@@ -1,0 +1,465 @@
+"""repro.analysis conformance: per-rule lint fixtures (positive + negative),
+registry semantics, baseline round-trip + fingerprint stability, the repo
+self-scan gate, and the jaxpr audit's callback/retrace detectors."""
+
+import os
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import baseline as bl
+from repro.analysis import compiled_path, registered_paths
+from repro.analysis.ast_lint import RULES, lint_paths, lint_source
+from repro.analysis.registry import KINDS
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rules(src: str) -> set:
+    return {f.rule for f in lint_source(textwrap.dedent(src))}
+
+
+# ------------------------------------------------------------ rule fixtures
+
+
+def test_js101_cast_on_traced_value():
+    assert "JS101" in _rules("""
+        import jax.numpy as jnp
+        from repro.analysis import compiled_path
+
+        @compiled_path("t.js101", kind="step")
+        def step(x):
+            s = jnp.sum(x)
+            return float(s)
+    """)
+
+
+def test_js101_shape_projection_is_static():
+    assert "JS101" not in _rules("""
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x):
+            return float(x.shape[0])
+    """)
+
+
+def test_js102_host_materialization():
+    assert "JS102" in _rules("""
+        import numpy as np
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x):
+            return np.asarray(x)
+    """)
+
+
+def test_js102_unmarked_host_code_is_not_compiled_context():
+    assert _rules("""
+        import numpy as np
+
+        def host_fn(x):
+            return np.asarray(x)
+    """) == set()
+
+
+def test_js103_branch_on_traced_value():
+    assert "JS103" in _rules("""
+        import jax.numpy as jnp
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return y
+            return -y
+    """)
+
+
+def test_js103_is_none_check_exempt():
+    assert "JS103" not in _rules("""
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x, y=None):
+            if y is None:
+                return x
+            return x + y
+    """)
+
+
+def test_js104_iteration_over_traced_value():
+    assert "JS104" in _rules("""
+        import jax.numpy as jnp
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x):
+            t = 0.0
+            for v in jnp.cumsum(x):
+                t = t + v
+            return t
+    """)
+
+
+def test_js104_range_loop_allowed():
+    assert "JS104" not in _rules("""
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x, n=3):
+            t = x
+            for i in range(n):
+                t = t + i
+            return t
+    """)
+
+
+def test_js105_per_value_sync_on_host_hot_path():
+    assert "JS105" in _rules("""
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="host")
+        def drive(executor, node_args, b):
+            out = executor.resilient_reduce(None, node_args, (), b)
+            return float(out)
+    """)
+
+
+def test_js105_device_get_is_the_sanctioned_sync():
+    assert "JS105" not in _rules("""
+        import jax
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="host")
+        def drive(executor, node_args, b):
+            out = executor.resilient_reduce(None, node_args, (), b)
+            host = jax.device_get(out)
+            return float(host)
+    """)
+
+
+def test_js201_uncached_jit_in_body():
+    assert "JS201" in _rules("""
+        import jax
+
+        def make(f):
+            return jax.jit(f)
+    """)
+
+
+def test_js201_lru_cache_exempts():
+    assert "JS201" not in _rules("""
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def make(f):
+            return jax.jit(f)
+    """)
+
+
+def test_js201_keyed_cache_dict_exempts():
+    assert "JS201" not in _rules("""
+        import jax
+
+        class Ex:
+            def compiled(self, f):
+                self._jitted[f] = jax.jit(f)
+                return self._jitted[f]
+    """)
+
+
+def test_js202_mutable_default_on_static_arg():
+    assert "JS202" in _rules("""
+        import jax
+
+        def f(x, opts=[1, 2]):
+            return x
+
+        g = jax.jit(f, static_argnames=("opts",))
+    """)
+
+
+def test_js202_hashable_default_ok():
+    assert "JS202" not in _rules("""
+        import jax
+
+        def f(x, opts=(1, 2)):
+            return x
+
+        g = jax.jit(f, static_argnames=("opts",))
+    """)
+
+
+def test_js203_shape_branch_is_info_not_error():
+    findings = lint_source(textwrap.dedent("""
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="step")
+        def step(x):
+            if x.shape[0] > 4:
+                return x * 2.0
+            return x
+    """))
+    assert {f.rule for f in findings} == {"JS203"}
+    (f,) = findings
+    assert f.severity == "info" and not f.fatal
+
+
+def test_js301_host_solver_in_compiled_step():
+    for call in ("solve_recovery(A, alive)", "scipy.optimize.linprog(A)"):
+        assert "JS301" in _rules(f"""
+            import scipy.optimize
+            from repro.core.recovery import solve_recovery
+            from repro.analysis import compiled_path
+
+            @compiled_path(kind="step")
+            def step(A, alive):
+                return {call}
+        """)
+
+
+def test_js301_reachability_through_call_graph():
+    # The solver is called by a helper the compiled step calls — still found.
+    assert "JS301" in _rules("""
+        from repro.core.recovery import solve_recovery
+        from repro.analysis import compiled_path
+
+        def helper(A, alive):
+            return solve_recovery(A, alive)
+
+        @compiled_path(kind="step")
+        def step(A, alive):
+            return helper(A, alive)
+    """)
+
+
+def test_factory_kind_lints_nested_defs_not_own_body():
+    findings = lint_source(textwrap.dedent("""
+        import numpy as np
+        from repro.analysis import compiled_path
+
+        @compiled_path(kind="factory")
+        def make(cfg):
+            table = np.asarray(cfg)  # host setup: allowed
+
+            def step(x):
+                return np.asarray(x)  # traced body: flagged
+
+            return step
+    """))
+    assert [f.rule for f in findings] == ["JS102"]
+    assert findings[0].qualname.endswith("step")
+
+
+def test_inline_suppression():
+    assert _rules("""
+        import jax
+
+        def make(f):
+            return jax.jit(f)  # repro-lint: disable=JS201
+    """) == set()
+
+
+def test_jit_decorator_marks_compiled_context():
+    assert "JS101" in _rules("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            return float(x)
+    """)
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_registry_kinds_and_metadata():
+    @compiled_path("t.reg.a", kind="host")
+    def fn_a():
+        pass
+
+    info = fn_a.__compiled_path__
+    assert (info.name, info.kind) == ("t.reg.a", "host")
+    assert "t.reg.a" in registered_paths()
+    assert "t.reg.a" in registered_paths(kind="host")
+    assert "t.reg.a" not in registered_paths(kind="step")
+
+
+def test_registry_rejects_duplicate_name_and_bad_kind():
+    @compiled_path("t.reg.dup")
+    def fn_b():
+        pass
+
+    with pytest.raises(ValueError, match="already registered"):
+        @compiled_path("t.reg.dup")
+        def fn_c():
+            pass
+
+    with pytest.raises(ValueError, match="kind"):
+        compiled_path("t.reg.k", kind="bogus")
+    assert set(KINDS) == {"step", "factory", "host"}
+
+
+# --------------------------------------------------------- baseline contract
+
+
+_BASELINE_SRC = """
+    import jax
+
+    def make(f):
+        return jax.jit(f)
+"""
+
+
+def test_fingerprints_survive_line_shifts():
+    a = lint_source(textwrap.dedent(_BASELINE_SRC))
+    b = lint_source("# leading comment\n\n" + textwrap.dedent(_BASELINE_SRC))
+    assert [f.fingerprint for f in a] == [f.fingerprint for f in b]
+    assert [f.line for f in a] != [f.line for f in b]
+
+
+def test_baseline_round_trip_filters_known_findings(tmp_path):
+    findings = lint_source(textwrap.dedent(_BASELINE_SRC))
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    bl.save_baseline(path, findings)
+    new, old = bl.split_findings(findings, bl.load_baseline(path))
+    assert new == [] and len(old) == len(findings)
+    # Empty/missing baseline keeps every finding "new".
+    new2, old2 = bl.split_findings(findings, bl.load_baseline(None))
+    assert len(new2) == len(findings) and old2 == []
+
+
+# ------------------------------------------------------------ repo self-scan
+
+
+def test_repo_self_scan_clean_modulo_baseline():
+    """The committed tree must pass its own gate: no fatal Layer-1 finding
+    outside the checked-in baseline."""
+    findings = lint_paths([os.path.join(REPO_ROOT, "src", "repro")])
+    baseline = bl.load_baseline(os.path.join(REPO_ROOT, bl.DEFAULT_RELPATH))
+    new = [f for f in findings if f.fatal and f.fingerprint not in baseline]
+    assert not new, "new lint findings:\n" + "\n".join(f.format() for f in new)
+
+
+def test_repo_baseline_entries_still_bind():
+    """Every baseline fingerprint must still match a live finding — stale
+    entries mean the debt was paid and the baseline should be regenerated."""
+    baseline = bl.load_baseline(os.path.join(REPO_ROOT, bl.DEFAULT_RELPATH))
+    live = {f.fingerprint for f in lint_paths([os.path.join(REPO_ROOT, "src", "repro")])}
+    stale = baseline - live
+    assert not stale, f"stale baseline fingerprints (regenerate): {sorted(stale)}"
+
+
+# ------------------------------------------------------------- jaxpr audit
+
+
+def test_jaxpr_audit_flags_injected_callback():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis.hotpaths import HotPathSpec
+    from repro.analysis.jaxpr_audit import audit_path, scan_jaxpr_callbacks
+
+    def dirty(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x,
+        )
+        return jnp.sum(y)
+
+    x = jnp.ones((4,), jnp.float32)
+    assert scan_jaxpr_callbacks(jax.make_jaxpr(dirty)(x))
+
+    import repro.core.executor  # noqa: F401  registers local.masked_reduce
+
+    spec = HotPathSpec(
+        name="dirty", registry_name="local.masked_reduce",
+        description="fixture", build=lambda: (dirty, [("b4", (x,))]),
+    )
+    audit = audit_path(spec)
+    assert audit.registered and audit.callback_prims and not audit.ok
+
+
+def test_jaxpr_audit_finds_callback_inside_scan():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import scan_jaxpr_callbacks
+
+    def nested(xs):
+        def body(c, v):
+            y = jax.pure_callback(
+                lambda a: np.asarray(a), jax.ShapeDtypeStruct((), xs.dtype), v
+            )
+            return c + y, y
+
+        out, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+        return out
+
+    found = scan_jaxpr_callbacks(jax.make_jaxpr(nested)(jnp.ones((3,), jnp.float32)))
+    assert any("callback" in name for name in found)
+
+
+def test_jaxpr_audit_clean_path_counts_traces():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    import repro.core.recovery  # noqa: F401  registers recovery.jax
+
+    from repro.analysis.hotpaths import HotPathSpec
+    from repro.analysis.jaxpr_audit import audit_path
+
+    def clean(x):
+        return jnp.sum(x * 2.0)
+
+    spec = HotPathSpec(
+        name="clean", registry_name="recovery.jax", description="fixture",
+        build=lambda: (
+            clean,
+            [("n4", (jnp.ones((4,), jnp.float32),)),
+             ("n8", (jnp.ones((8,), jnp.float32),))],
+        ),
+    )
+    audit = audit_path(spec)
+    assert audit.ok, audit.as_dict()
+    assert audit.traces == audit.expected_traces == 2
+    assert audit.callback_prims == [] and audit.transfer_ops == []
+
+
+def test_jaxpr_audit_unregistered_path_fails():
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis.hotpaths import HotPathSpec
+    from repro.analysis.jaxpr_audit import audit_path
+
+    spec = HotPathSpec(
+        name="ghost", registry_name="no.such.path", description="fixture",
+        build=lambda: (lambda x: x, [("n1", (jnp.ones((2,)),))]),
+    )
+    audit = audit_path(spec)
+    assert not audit.registered and not audit.ok
+
+
+def test_hot_path_specs_cover_the_three_tiers():
+    from repro.analysis.hotpaths import hot_path_specs
+
+    specs = hot_path_specs()
+    names = {s.registry_name for s in specs}
+    assert names == {"train.train_step", "local.masked_reduce", "query.assign_min"}
+
+
+def test_rules_table_consistent():
+    assert set(RULES) == {
+        "JS101", "JS102", "JS103", "JS104", "JS105",
+        "JS201", "JS202", "JS203", "JS301",
+    }
+    for sev, _title in RULES.values():
+        assert sev in ("error", "warn", "info")

@@ -1010,6 +1010,38 @@ def test_elastic_reshard_plan_survives_unbalanced_loads():
     assert pipe.batch_shape == shape_before  # static shapes snapshotted
 
 
+def test_session_owns_permanent_loss_and_reshard():
+    """The permanent-loss/reshard machinery lives in ResilienceSession (the
+    group manager is a facade): covered losses re-solve once, coverage loss
+    reshards, listeners fire, and every pattern cache is dropped."""
+    from repro.core.assignment import cyclic_assignment
+    from repro.core.resilience import ResilienceSession
+
+    sess = ResilienceSession(cyclic_assignment(8, 4, 2))
+    events = []
+    sess.add_patch_listener(lambda moved, om, nm: events.append((tuple(moved), om, nm)))
+
+    res = sess.permanent_loss(3)
+    assert sess.stats.reshards == 0 and len(res.uncovered) == 0
+    assert sess.permanent_dead == {3}
+    assert not sess.alive_mask()[3] and sess.alive_mask()[0]
+
+    res2 = sess.permanent_loss(2)  # adjacent deaths → coverage lost
+    assert sess.stats.reshards == 1
+    assert len(res2.uncovered) == 0  # survivors cover everything again
+    assert sess.assignment.scheme == "elastic_cyclic"
+    assert events and len(events[0][0]) > 0  # listener saw the changed rows
+    assert sess.version == 1
+    # Dead rows hold nothing; survivors hold all 8 shards.
+    m = sess.assignment.matrix
+    assert m[2].sum() == 0 and m[3].sum() == 0
+    assert (m[[0, 1]].sum(axis=0) > 0).all()
+    assert sess.pattern_covers(sess.alive_mask())
+
+    sess.permanent_join(3)  # warm takeover: no reshard on joins
+    assert sess.permanent_dead == {2} and sess.stats.reshards == 1
+
+
 # --------------------------------------- scenario-matrix conformance test
 
 
