@@ -5,12 +5,12 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all test-cov lint docs-check bench-kernels bench-scenarios bench-stream bench-train bench
+.PHONY: test test-all test-cov lint docs-check bench-kernels bench-scenarios bench-serve bench-stream bench-train bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: lint docs-check bench-scenarios bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
+test-all: lint docs-check bench-scenarios bench-serve bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
 
 lint:  ## jit-safety static analysis (AST lint + jaxpr/HLO hot-path audit) → ANALYSIS.json
@@ -29,6 +29,9 @@ bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 
 bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor) → BENCH_scenarios.json
 	timeout 300 $(PY) -m benchmarks.run scenarios --emit BENCH_scenarios.json
+
+bench-serve:  ## serving-frontend burst (qps, p50/p99/p999, occupancy, cache hit rate) → BENCH_serve.json
+	timeout 300 $(PY) -m benchmarks.run serve --emit BENCH_serve.json
 
 bench-stream:  ## streaming-layer sweep (ingest rows/s, query p50/p99, compactions) → BENCH_stream.json
 	timeout 300 $(PY) -m benchmarks.run stream --emit BENCH_stream.json

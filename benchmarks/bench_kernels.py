@@ -47,12 +47,23 @@ def run() -> None:
     us, (idx_c, dist_c) = timed(pd_ops.assign_min, x, c, impl="xla_chunked", iters=5)
     err = float(jnp.max(jnp.abs(dist_c - dist_a)))
     emit("assign_min_chunked", us, f"impl=xla_chunked max_err={err:.2e}")
-    # Streaming shape: n·k past the materialization budget.
+    # Streaming shape: n·k past the materialization budget.  The "before"
+    # row pins the pre-ladder auto pick at this shape (xla_chunked — the
+    # 1.56 s hot spot the strategy ladder was built to kill), so the win
+    # stays measured rather than remembered.
     xl = jnp.asarray(rng.normal(size=(65536, 32)), jnp.float32)
     cl = jnp.asarray(rng.normal(size=(2048, 32)), jnp.float32)
+    us_before, _ = timed(pd_ops.assign_min, xl, cl, impl="xla_chunked", iters=2)
+    emit(
+        "assign_min_large_before", us_before,
+        "impl=xla_chunked n=65536 k=2048 (pre-ladder auto pick)",
+    )
     big_name = dispatch.resolve("assign_min", "auto", xl, cl).name
     us, _ = timed(pd_ops.assign_min, xl, cl, iters=2)
-    emit("assign_min_large_auto", us, f"impl={big_name} n=65536 k=2048")
+    emit(
+        "assign_min_large_auto", us,
+        f"impl={big_name} n=65536 k=2048 speedup_vs_before={us_before / us:.2f}x",
+    )
 
     # -------------------------------------------------------------- segsum
     w = jnp.asarray(rng.random(4096), jnp.float32)

@@ -1,0 +1,118 @@
+"""Serving-tier benchmark: the async micro-batching frontend under load.
+
+Drives the real :class:`~repro.serve.frontend.AsyncFrontend` (asyncio shell,
+system clock, compiled dispatch) with a concurrent open-loop burst of
+mixed-size queries, a configurable repeat fraction (exercising the
+assignment cache), and two tenants — then reports the numbers a serving SLO
+is written against:
+
+* ``serve_qps``            — answered query rows per second over the burst;
+* ``serve_p50/p99/p999``   — per-query latency percentiles (µs);
+* ``serve_occupancy``      — mean dispatched-rows / padded-bucket-rows;
+* ``serve_cache_hit_rate`` — assignment-cache hits / lookups.
+
+Knobs: ``REPRO_BENCH_SERVE_QUERIES`` (default 512 queries/burst),
+``REPRO_SERVE_WINDOW_MS`` / ``REPRO_SERVE_MAX_BATCH`` as in production.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import os
+import time
+
+import numpy as np
+
+from repro.serve import AsyncFrontend
+from repro.stream import StreamingSession
+
+from .common import emit
+
+D, K = 16, 32
+REPEAT_FRACTION = 0.3  # of queries re-ask an earlier question (cache food)
+
+
+def _make_session(d: int, seed: int) -> StreamingSession:
+    rng = np.random.default_rng(seed)
+    s = StreamingSession(d=d, k=K, num_nodes=8, leaf_size=256, seed=seed)
+    for _ in range(2):
+        s.ingest(rng.normal(size=(2048, d)).astype(np.float32))
+    s.solve()
+    return s
+
+
+def _queries(n: int, rng, pool: list) -> list:
+    """Mixed-size query batches; REPEAT_FRACTION re-ask pool questions the
+    warmup already answered (steady-state cache food), the rest are fresh."""
+    out = []
+    for _ in range(n):
+        if rng.random() < REPEAT_FRACTION:
+            out.append(pool[int(rng.integers(len(pool)))])
+        else:
+            out.append(rng.normal(size=(int(rng.integers(1, 9)), D)).astype(np.float32))
+    return out
+
+
+async def _burst(af: AsyncFrontend, qs: list, tenants: list) -> list:
+    async def one(i, q):
+        t0 = time.perf_counter()
+        await af.query(tenants[i % len(tenants)], q)
+        return time.perf_counter() - t0
+
+    return await asyncio.gather(*[one(i, q) for i, q in enumerate(qs)])
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n_queries = int(os.environ.get("REPRO_BENCH_SERVE_QUERIES", "512"))
+    af = AsyncFrontend(window=0.002, max_batch=256, cache_size=1024)
+    af.core.add_tenant("t0", _make_session(D, seed=0))
+    af.core.add_tenant("t1", _make_session(D, seed=1))
+    tenants = ["t0", "t1"]
+
+    # Warm every compiled shape bucket + the device centers so the measured
+    # burst times serving, not lowering; answer the repeat pool once so the
+    # burst's repeats exercise the cache the way a steady-state workload does.
+    import jax.numpy as jnp
+
+    from repro.serve.frontend import _batch_assign_fn
+
+    for name in tenants:
+        c = jnp.asarray(af.core.tenant(name).session.ensure_model(), jnp.float32)
+        for b in (64, 128, 256, 512):
+            _batch_assign_fn(af.core.impl)(jnp.zeros((b, D), jnp.float32), c)
+    pool = [rng.normal(size=(int(m), D)).astype(np.float32) for m in rng.integers(1, 9, 32)]
+    asyncio.run(_burst(af, pool * 2, tenants))
+
+    qs = _queries(n_queries, rng, pool)
+    rows = sum(q.shape[0] for q in qs)
+    t0 = time.perf_counter()
+    lat = np.asarray(sorted(asyncio.run(_burst(af, qs, tenants))))
+    wall = time.perf_counter() - t0
+
+    def pct(p: float) -> float:
+        return float(lat[min(len(lat) - 1, int(p * len(lat)))]) * 1e6
+
+    stats = af.core.stats
+    emit(
+        "serve_qps", wall / n_queries * 1e6,
+        f"qps={rows / wall:.0f} queries={n_queries} rows={rows} "
+        f"dispatches={stats['dispatches']} window_ms=2.0",
+    )
+    emit("serve_p50", pct(0.50), "per-query latency, µs")
+    emit("serve_p99", pct(0.99), "per-query latency, µs")
+    emit("serve_p999", pct(0.999), "per-query latency, µs")
+    emit(
+        "serve_occupancy", stats["occupancy"] * 100,
+        f"pct of padded bucket rows filled; batches={stats['dispatches']} "
+        f"size_closes={stats['size_closes']} window_closes={stats['window_closes']}",
+    )
+    emit(
+        "serve_cache_hit_rate", stats["cache_hit_rate"] * 100,
+        f"pct; hits={stats['cache_hits']} misses={stats['cache_misses']} "
+        f"repeat_fraction={REPEAT_FRACTION}",
+    )
+
+
+if __name__ == "__main__":
+    run()

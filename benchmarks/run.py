@@ -22,6 +22,7 @@ from . import (
     bench_fig1,
     bench_kernels,
     bench_scenarios,
+    bench_serve,
     bench_stream,
     bench_train_resilience,
     bench_training,
@@ -36,6 +37,7 @@ BENCHES = {
     "training": bench_training.run,
     "kernels": bench_kernels.run,
     "scenarios": bench_scenarios.run,
+    "serve": bench_serve.run,
     "stream": bench_stream.run,
     "train_resilience": bench_train_resilience.run,
 }

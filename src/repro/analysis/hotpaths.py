@@ -12,7 +12,7 @@ per path without running a single production step:
   one trace each — i.e. shapes inside a bucket are fixed, and nothing in the
   step is shape- or value-dependent in a way that forces a retrace).
 
-The three paths mirror the repo's three hot loops (ROADMAP tier-1 surface):
+The paths mirror the repo's hot loops (ROADMAP tier-1 surface):
 
 ``train.train_step``
     The full loss → grad → AdamW step (tiny model config — the audit checks
@@ -24,6 +24,11 @@ The three paths mirror the repo's three hot loops (ROADMAP tier-1 surface):
 ``query.assign_min``
     The streaming layer's nearest-center dispatch
     (:func:`repro.stream.query._assign_run`), bucketed by padded batch size.
+``serve.batch_assign``
+    The serving frontend's micro-batch dispatch
+    (:func:`repro.serve.frontend._batch_assign_run`) — the same compiled
+    shape but reached from the multi-tenant batcher, audited separately so
+    the serving tier cannot silently regrow host callbacks.
 
 Specs deliberately build the RAW callables (``_masked_step_raw``,
 ``_assign_run``, ``make_train_step``'s product) — the same objects production
@@ -133,8 +138,26 @@ def _build_query_assign():
     return run, buckets
 
 
+def _build_serve_batch_assign():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..serve.frontend import _batch_assign_run
+
+    run = _batch_assign_run("auto")
+    rng = np.random.default_rng(3)
+    c = jnp.asarray(rng.normal(size=(5, 3)), jnp.float32)
+
+    def bucket(n: int):
+        q = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+        return (q, c)
+
+    buckets = [("q64", bucket(64)), ("q256", bucket(256))]
+    return run, buckets
+
+
 def hot_path_specs() -> Sequence[HotPathSpec]:
-    """The three registered hot paths, in tier order."""
+    """The four registered hot paths, in tier order."""
     return (
         HotPathSpec(
             name="train_step",
@@ -153,5 +176,11 @@ def hot_path_specs() -> Sequence[HotPathSpec]:
             registry_name="query.assign_min",
             description="streaming nearest-center dispatch (bucketed batches)",
             build=_build_query_assign,
+        ),
+        HotPathSpec(
+            name="serve_batch_assign",
+            registry_name="serve.batch_assign",
+            description="frontend micro-batch dispatch (serving tier)",
+            build=_build_serve_batch_assign,
         ),
     )

@@ -62,6 +62,7 @@ __all__ = [
     "dispatch",
     "impl_names",
     "interpret_enabled",
+    "ladder_strategy",
     "pick_blocks",
     "register_alias",
     "register_impl",
@@ -70,6 +71,7 @@ __all__ = [
     "shape_bucket",
     "should_stream",
     "tuned_block_config",
+    "tuned_strategy",
 ]
 
 # Debug/feature env vars — read at resolution time.  The public ops resolve
@@ -268,6 +270,45 @@ def should_stream(n: int, k: int, *, itemsize: int = 4, budget: int = MATERIALIZ
     return n * k * itemsize > budget
 
 
+# Centers working set (k·d elements, ≈4 MB f32 at the default) above which
+# even a "broadcast all centers, chunk the rows" pass holds too much resident
+# state and the center-chunked streaming rung takes over.  The analogue of
+# the SECrossJoin / BroadcastUDF / ChunkedBroadcast broadcastThresholdElems
+# cutoff (SNIPPETS.md Snippet 1), sized for one core's L2/L3 reuse here.
+BROADCAST_ELEMS = 1 << 20
+
+
+def ladder_strategy(
+    n: int,
+    k: int,
+    d: int,
+    *,
+    itemsize: int = 4,
+    materialize_budget: int = MATERIALIZE_BUDGET,
+    broadcast_elems: int = BROADCAST_ELEMS,
+) -> str:
+    """The cross-op assignment-strategy ladder, selected by n·k and k·d.
+
+    * ``"ref"``        — materialize the full (n, k) matrix: optimal while it
+      fits the budget (one fused pass, best matmul shape).
+    * ``"broadcast"``  — broadcast ALL centers, chunk the *rows*: each scan
+      step computes a budget-sized (bn, k) score tile with one well-shaped
+      matmul and reduces it immediately.  Right whenever the centers
+      themselves are small (k·d under ``broadcast_elems``).
+    * ``"chunked"``    — chunk the *centers*, carry a running (min, argmin)
+      over the whole n: the only rung whose resident state is O(n) no matter
+      how large k·d grows.
+
+    Pure shape policy — callers refine the choice per measured shape bucket
+    via :func:`tuned_strategy` when ``REPRO_AUTOTUNE=1``.
+    """
+    if n * k * itemsize <= materialize_budget:
+        return "ref"
+    if k * d <= broadcast_elems:
+        return "broadcast"
+    return "chunked"
+
+
 # ---------------------------------------------------------- autotune cache
 
 
@@ -277,6 +318,9 @@ def shape_bucket(v: int) -> int:
 
 
 _AUTOTUNE_CACHE: Dict[tuple, BlockConfig] = {}
+# Measured *strategy* winners (ladder rung per shape bucket) — same keying as
+# the block-config cache, but the cached value is a canonical impl name.
+_STRATEGY_CACHE: Dict[tuple, str] = {}
 _AUTOTUNE_STATS = {
     "hits": 0, "misses": 0, "measured": 0, "errors": 0,
     "disk_loaded": 0, "disk_errors": 0,
@@ -293,13 +337,18 @@ def clear_autotune_cache() -> None:
     delete :func:`autotune_cache_file` to force re-measurement on disk too)."""
     global _PERSIST_LOADED_FROM
     _AUTOTUNE_CACHE.clear()
+    _STRATEGY_CACHE.clear()
     _PERSIST_LOADED_FROM = None
     for k in _AUTOTUNE_STATS:
         _AUTOTUNE_STATS[k] = 0
 
 
 def autotune_cache_info() -> dict:
-    return {"entries": dict(_AUTOTUNE_CACHE), **_AUTOTUNE_STATS}
+    return {
+        "entries": dict(_AUTOTUNE_CACHE),
+        "strategies": dict(_STRATEGY_CACHE),
+        **_AUTOTUNE_STATS,
+    }
 
 
 # ------------------------------------------------- persistent autotune cache
@@ -363,6 +412,16 @@ def _persist_load() -> None:
             if key not in _AUTOTUNE_CACHE:  # in-process winners take priority
                 _AUTOTUNE_CACHE[key] = cfg
                 loaded += 1
+        # Strategy winners: absent from pre-ladder cache files (same payload
+        # version — both directions stay readable).
+        for e in payload.get("strategies", []):
+            key = (
+                str(e["op"]), backend(), device_kind(),
+                tuple(int(s) for s in e["shapes"]), str(e["dtype"]),
+            )
+            if key not in _STRATEGY_CACHE:
+                _STRATEGY_CACHE[key] = str(e["choice"])
+                loaded += 1
         _AUTOTUNE_STATS["disk_loaded"] += loaded
     except FileNotFoundError:
         pass
@@ -387,6 +446,11 @@ def _persist_save() -> None:
         for (op, kb, kk, shapes, dtype), cfg in _AUTOTUNE_CACHE.items()
         if kb == b and kk == kind
     }
+    merged_strat = {
+        (op, tuple(shapes), dtype): choice
+        for (op, kb, kk, shapes, dtype), choice in _STRATEGY_CACHE.items()
+        if kb == b and kk == kind
+    }
     try:
         with open(path) as f:
             payload = json.load(f)
@@ -400,15 +464,22 @@ def _persist_save() -> None:
             for e in payload["entries"]:
                 k = (str(e["op"]), tuple(int(s) for s in e["shapes"]), str(e["dtype"]))
                 merged.setdefault(k, BlockConfig(bn=int(e["bn"]), bk=int(e["bk"])))
+            for e in payload.get("strategies", []):
+                k = (str(e["op"]), tuple(int(s) for s in e["shapes"]), str(e["dtype"]))
+                merged_strat.setdefault(k, str(e["choice"]))
     except Exception:
         pass  # unreadable/corrupt file: overwritten below
     entries = [
         {"op": op, "shapes": list(shapes), "dtype": dtype, "bn": cfg.bn, "bk": cfg.bk}
         for (op, shapes, dtype), cfg in sorted(merged.items())
     ]
+    strategies = [
+        {"op": op, "shapes": list(shapes), "dtype": dtype, "choice": choice}
+        for (op, shapes, dtype), choice in sorted(merged_strat.items())
+    ]
     payload = {
         "version": _PERSIST_VERSION, "backend": b, "device_kind": kind,
-        "entries": entries,
+        "entries": entries, "strategies": strategies,
     }
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -495,5 +566,52 @@ def tuned_block_config(
             if t < best_t:
                 best, best_t = cand, t
     _AUTOTUNE_CACHE[key] = best
+    _persist_save()
+    return best
+
+
+def tuned_strategy(
+    op: str,
+    shapes: Sequence[int],
+    dtype: Any,
+    *,
+    default: str,
+    candidates: Sequence[str] = (),
+    bench: Optional[Callable[[str], Callable[[], Any]]] = None,
+) -> str:
+    """Strategy (ladder-rung) choice for ``op`` at the given shape bucket.
+
+    The measured-autotune tiebreaker of :func:`ladder_strategy`: returns the
+    analytic ``default`` unless ``REPRO_AUTOTUNE=1`` and a ``bench`` factory
+    is provided, in which case each candidate *strategy name* is timed once
+    per ``(op, backend, device-kind, shape-bucket, dtype)`` key and the
+    winner cached in-process and on disk alongside the block-config winners
+    (``bench(name)`` returns a zero-arg callable running that strategy on
+    representative synthetic inputs).
+    """
+    if autotune_enabled():
+        _persist_load()
+    key = (op, backend(), device_kind(), tuple(shape_bucket(s) for s in shapes), str(dtype))
+    cached = _STRATEGY_CACHE.get(key)
+    if cached is not None and (not candidates or cached in candidates):
+        _AUTOTUNE_STATS["hits"] += 1
+        return cached
+    if not (autotune_enabled() and bench is not None and len(candidates) > 1):
+        # Analytic ladder only — not cached, for the same reason the block
+        # model's default is not: a later REPRO_AUTOTUNE=1 must still measure.
+        return default
+    _AUTOTUNE_STATS["misses"] += 1
+    best, best_t = default, float("inf")
+    with jax.ensure_compile_time_eval():
+        for cand in candidates:
+            try:
+                t = _time_once(bench(cand))
+            except Exception:  # a strategy that fails to compile never wins
+                _AUTOTUNE_STATS["errors"] += 1
+                continue
+            _AUTOTUNE_STATS["measured"] += 1
+            if t < best_t:
+                best, best_t = cand, t
+    _STRATEGY_CACHE[key] = best
     _persist_save()
     return best

@@ -1,0 +1,37 @@
+"""Serving tier (`repro.serve`).
+
+Two independent surfaces:
+
+* **Query serving** — the planet-scale front door for the clustering stack:
+  :mod:`repro.serve.frontend` (async micro-batching + per-tenant routing +
+  admission control + assignment cache) over :mod:`repro.serve.batcher`
+  (sans-io shape-bucketed collection), :mod:`repro.serve.cache`
+  (generation-keyed result LRU), and :mod:`repro.serve.clock` (the
+  virtual-clock seam the deterministic concurrency suite drives).
+* **Model serving** — :mod:`repro.serve.decode`: batched prefill +
+  single-token decode for the transformer side.  Imported on demand (it
+  pulls the model stack); ``import repro.serve`` stays clustering-only.
+"""
+
+from .batcher import Batch, MicroBatcher, Ticket  # noqa: F401
+from .cache import AssignmentCache  # noqa: F401
+from .clock import SystemClock, VirtualClock  # noqa: F401
+from .frontend import (  # noqa: F401
+    AdmissionError,
+    AsyncFrontend,
+    ServingFrontend,
+    TenantState,
+)
+
+__all__ = [
+    "AdmissionError",
+    "AssignmentCache",
+    "AsyncFrontend",
+    "Batch",
+    "MicroBatcher",
+    "ServingFrontend",
+    "SystemClock",
+    "Ticket",
+    "TenantState",
+    "VirtualClock",
+]

@@ -33,6 +33,14 @@ def make_decode_fn(cfg: ModelConfig, ctx: T.ModelContext):
     return decode_fn
 
 
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg: ModelConfig, ctx: T.ModelContext):
+    """One process-wide compiled decode step per (cfg, ctx) — repeated
+    ``greedy_generate`` calls (tests, the serving example loop) must not
+    re-lower the step each time."""
+    return jax.jit(make_decode_fn(cfg, ctx))
+
+
 def greedy_generate(
     params,
     cfg: ModelConfig,
@@ -56,7 +64,7 @@ def greedy_generate(
     T0 = prompt_tokens.shape[-1]
     max_len = max_len or (T0 + steps)
     cache = T.init_cache(cfg, B, max_len)
-    decode = jax.jit(make_decode_fn(cfg, ctx))
+    decode = _decode_fn(cfg, ctx)
 
     logits = None
     for t in range(T0):

@@ -1,0 +1,414 @@
+"""Planet-scale query frontend: async micro-batching over StreamingSessions.
+
+``StreamingSession.query`` is a single-process synchronous call — one caller,
+one compiled dispatch, one device round-trip.  This tier is how *many
+concurrent* callers hit many sessions:
+
+* **Micro-batching** — concurrent queries land in per-``(tenant, d)`` shape
+  buckets (:class:`~repro.serve.batcher.MicroBatcher`); a bucket becomes ONE
+  compiled ``assign_min`` dispatch + ONE ``jax.device_get`` when its batch
+  window elapses or it reaches ``max_batch`` rows.  Rows are padded to the
+  power-of-two compiled buckets of :func:`repro.stream.query.bucket_size`,
+  so the steady state reuses a handful of programs.
+* **Per-tenant model routing** — each tenant name maps to its own
+  :class:`~repro.stream.session.StreamingSession`; centers are uploaded to
+  device once per (model object, version) and reused across batches.
+* **Admission control** — callers attach ``max_staleness_points`` /
+  ``max_staleness_ingests`` bounds.  Violations reject at submit
+  (:class:`AdmissionError`, immediate backpressure) AND are re-checked at
+  dispatch, because ingest may run concurrently while a ticket waits out
+  the batch window.
+* **Assignment-result cache** — repeat / near-duplicate query batches are
+  answered from an LRU keyed by ``(tenant, generation, quantized-query
+  digest)`` (:class:`~repro.serve.cache.AssignmentCache`); any ingest or
+  model-version bump changes the generation and thus invalidates.
+
+The core (:class:`ServingFrontend`) is sans-io: no threads, no sleeps, time
+injected via a clock — which is what makes the concurrency test suite
+deterministic.  :class:`AsyncFrontend` is the thin asyncio shell production
+callers await on.
+
+Env knobs (defaults for unset constructor args):
+``REPRO_SERVE_WINDOW_MS`` — batch window in milliseconds (2.0);
+``REPRO_SERVE_MAX_BATCH`` — rows that close a bucket early (256);
+``REPRO_SERVE_CACHE`` — assignment-cache entries (1024).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import functools
+import os
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..analysis import compiled_path
+from ..kernels.pairwise_dist import ops as pd
+from ..stream.query import QueryResult, bucket_size
+from .batcher import Batch, MicroBatcher, Ticket
+from .cache import AssignmentCache
+from .clock import SystemClock
+
+__all__ = ["AdmissionError", "ServingFrontend", "AsyncFrontend", "TenantState"]
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, str(default)))
+    except ValueError:
+        return default
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return max(0, int(os.environ.get(name, str(default))))
+    except ValueError:
+        return default
+
+
+class AdmissionError(RuntimeError):
+    """A query's staleness bound cannot be honored by the serving model."""
+
+    def __init__(self, message: str, *, tenant: str = "", staleness: Optional[dict] = None):
+        super().__init__(message)
+        self.tenant = tenant
+        self.staleness = dict(staleness or {})
+
+
+@compiled_path("serve.batch_assign", kind="factory")
+def _batch_assign_run(impl: str):
+    """The raw (unjitted) batched assigner the frontend jits — registered so
+    both analyzer layers (AST lint + jaxpr/HLO audit) cover the serving
+    dispatch exactly like the per-session query path."""
+
+    def run(q, c):
+        idx, d2 = pd.assign_min(q, c, impl=impl)
+        return idx, jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_assign_fn(impl: str):
+    """One process-wide compiled assigner per impl, shared by every frontend
+    (frontends come and go in tests; the jit cache must not)."""
+    return jax.jit(_batch_assign_run(impl))
+
+
+@dataclasses.dataclass
+class TenantState:
+    """One tenant's session plus its device-resident model cache."""
+
+    session: object                    # StreamingSession
+    queries_served: int = 0
+    batches: int = 0
+    elastic_patches: int = 0
+    _centers_key: object = None
+    _centers_dev: object = None
+
+    def device_centers(self, centers, version: int):
+        """Centers on device, re-uploaded only when the model changes."""
+        key = (id(centers), int(version), np.shape(centers))
+        if self._centers_key != key:
+            self._centers_dev = jnp.asarray(centers, jnp.float32)
+            self._centers_key = key
+        return self._centers_dev
+
+
+def _violation(staleness: dict, ticket: Ticket) -> Optional[str]:
+    """Reason the ticket's bound is violated by ``staleness``, or None."""
+    bp = ticket.max_staleness_points
+    if bp is not None and staleness["points"] > bp:
+        return (
+            f"staleness {staleness['points']} points exceeds the query's "
+            f"bound of {bp}"
+        )
+    bi = ticket.max_staleness_ingests
+    if bi is not None and staleness["ingests"] > bi:
+        return (
+            f"staleness {staleness['ingests']} ingests exceeds the query's "
+            f"bound of {bi}"
+        )
+    return None
+
+
+class ServingFrontend:
+    """Sans-io micro-batching query tier over per-tenant StreamingSessions."""
+
+    def __init__(
+        self,
+        *,
+        window: Optional[float] = None,
+        max_batch: Optional[int] = None,
+        cache_size: Optional[int] = None,
+        quantize: int = 6,
+        impl: str = "auto",
+        clock=None,
+    ):
+        if window is None:
+            window = _env_float("REPRO_SERVE_WINDOW_MS", 2.0) / 1000.0
+        if max_batch is None:
+            max_batch = max(1, _env_int("REPRO_SERVE_MAX_BATCH", 256))
+        if cache_size is None:
+            cache_size = _env_int("REPRO_SERVE_CACHE", 1024)
+        self.clock = clock if clock is not None else SystemClock()
+        self.impl = impl
+        self.batcher = MicroBatcher(window=window, max_batch=max_batch)
+        self.cache = AssignmentCache(cache_size, quantize=quantize)
+        self._tenants: Dict[str, TenantState] = {}
+        self.served = 0                  # rows answered (cache + dispatch)
+        self.rejected = 0                # tickets bounced by admission
+        self.dispatches = 0              # compiled batch dispatches
+        self._occupancy_sum = 0.0        # Σ rows/padded-bucket per dispatch
+
+    # ------------------------------------------------------------ tenants
+
+    def add_tenant(self, name: str, session) -> TenantState:
+        """Route queries for ``name`` to ``session``; idempotent per name."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        state = TenantState(session=session)
+        self._tenants[name] = state
+        # Count elastic re-assignments so serving stats show model-side
+        # turbulence next to query-side latency (the patch itself changes
+        # placement, not the model — cached answers stay valid).
+        session.resilience.add_patch_listener(
+            lambda *_a, _s=state: setattr(
+                _s, "elastic_patches", _s.elastic_patches + 1
+            )
+        )
+        return state
+
+    def tenant(self, name: str) -> TenantState:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {name!r}; register it with add_tenant()"
+            ) from None
+
+    # ------------------------------------------------------------- submit
+
+    def submit(
+        self,
+        tenant: str,
+        queries,
+        *,
+        max_staleness_points: Optional[int] = None,
+        max_staleness_ingests: Optional[int] = None,
+    ) -> Ticket:
+        """Admit one query row-batch; returns its :class:`Ticket`.
+
+        Cache hits complete the ticket immediately; otherwise it joins the
+        tenant's open shape bucket and completes on a later :meth:`flush`.
+        Raises :class:`AdmissionError` if the tenant's staleness already
+        violates the caller's bound — rejecting at the door is cheaper for
+        both sides than a doomed batched dispatch.
+        """
+        state = self.tenant(tenant)
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[0] == 0:
+            raise ValueError(f"queries must be non-empty (n, d), got {q.shape}")
+        now = self.clock.now()
+        ticket = Ticket(
+            tenant=tenant,
+            queries=q,
+            submitted_at=now,
+            max_staleness_points=max_staleness_points,
+            max_staleness_ingests=max_staleness_ingests,
+        )
+        staleness = state.session.staleness
+        reason = _violation(staleness, ticket)
+        if reason is not None:
+            self.rejected += 1
+            ticket._reject(reason)
+            raise AdmissionError(reason, tenant=tenant, staleness=staleness)
+        hit = self.cache.get(self.cache.key(tenant, state.session.generation, q))
+        if hit is not None:
+            # Generation-keyed hit: the cached answer's staleness equals what
+            # a fresh dispatch would report right now, so the bound check
+            # above already covers it.
+            ticket.from_cache = True
+            ticket._complete(hit)
+            state.queries_served += ticket.rows
+            self.served += ticket.rows
+            return ticket
+        self.batcher.submit(ticket, now)
+        return ticket
+
+    # -------------------------------------------------------------- drain
+
+    def due(self) -> Optional[float]:
+        """When the next flush will produce work (None if nothing pending)."""
+        return self.batcher.due(self.clock.now())
+
+    def flush(self, now: Optional[float] = None) -> int:
+        """Dispatch every batch whose window has closed; returns how many."""
+        batches = self.batcher.poll(self.clock.now() if now is None else now)
+        for batch in batches:
+            self._dispatch(batch)
+        return len(batches)
+
+    def drain(self) -> int:
+        """Dispatch everything pending regardless of windows (shutdown)."""
+        batches = self.batcher.drain()
+        for batch in batches:
+            self._dispatch(batch)
+        return len(batches)
+
+    # ----------------------------------------------------------- dispatch
+
+    @compiled_path("serve.dispatch", kind="host")
+    def _dispatch(self, batch: Batch) -> None:
+        """One closed bucket → one compiled call → ONE device_get.
+
+        Admission is re-checked against *live* staleness first: ingest may
+        have run while tickets waited out the window, and a bound the
+        submit-time check admitted can be violated by dispatch time.
+        """
+        state = self._tenants[batch.tenant]
+        session = state.session
+        centers = session.ensure_model()
+        staleness = session.staleness
+        live = []
+        for t in batch.tickets:
+            reason = _violation(staleness, t)
+            if reason is not None:
+                self.rejected += 1
+                t._reject(reason)
+            else:
+                live.append(t)
+        if not live:
+            return
+        q = np.concatenate([t.queries for t in live], axis=0)
+        n, d = q.shape
+        bucket = bucket_size(n)
+        qp = np.zeros((bucket, d), np.float32)
+        qp[:n] = q  # zero padding rows are sliced off below
+        c_dev = state.device_centers(centers, session.version)
+        idx, dist = _batch_assign_fn(self.impl)(qp, c_dev)
+        # Fetch the FULL padded arrays and slice on the host: `idx[:n]` on a
+        # device array is itself a traced op — one compile per distinct row
+        # count and ~ms of dispatch per call, which profiled as 6× the cost
+        # of the assignment itself.  The padding rows are a few KB.
+        idx_h, dist_h = jax.device_get((idx, dist))
+        idx_h = np.asarray(idx_h[:n], np.int32)
+        dist_h = np.asarray(dist_h[:n], np.float32)
+        generation = session.generation
+        version = session.version
+        offset = 0
+        for t in live:
+            m = t.rows
+            result = QueryResult(
+                indices=idx_h[offset : offset + m],
+                distances=dist_h[offset : offset + m],
+                staleness_points=staleness["points"],
+                staleness_ingests=staleness["ingests"],
+                version=version,
+            )
+            offset += m
+            self.cache.put(self.cache.key(batch.tenant, generation, t.queries), result)
+            t._complete(result)
+            state.queries_served += m
+            self.served += m
+        state.batches += 1
+        self.dispatches += 1
+        self._occupancy_sum += n / bucket
+
+    # -------------------------------------------------------------- stats
+
+    @property
+    def occupancy(self) -> float:
+        """Mean dispatched-rows / padded-bucket-rows (1.0 = zero padding)."""
+        return self._occupancy_sum / self.dispatches if self.dispatches else 0.0
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "tenants": len(self._tenants),
+            "served": self.served,
+            "rejected": self.rejected,
+            "dispatches": self.dispatches,
+            "occupancy": self.occupancy,
+            "pending": self.batcher.pending,
+            "rows_in": self.batcher.rows_in,
+            "batches_closed": self.batcher.batches_closed,
+            "window_closes": self.batcher.window_closes,
+            "size_closes": self.batcher.size_closes,
+            **{f"cache_{k}": v for k, v in self.cache.stats.items()},
+        }
+
+
+class AsyncFrontend:
+    """The asyncio shell: ``await query(...)`` over the sans-io core.
+
+    All scheduling happens on the event loop (``loop.call_later`` armed to
+    the batcher's next deadline) — no polling, no background threads.  The
+    core stays the single source of truth, so tests that drive it directly
+    with a virtual clock are testing exactly what this shell runs.
+    """
+
+    def __init__(self, frontend: Optional[ServingFrontend] = None, **kwargs):
+        self.core = frontend if frontend is not None else ServingFrontend(**kwargs)
+        self._timer: Optional[asyncio.TimerHandle] = None
+
+    async def query(
+        self,
+        tenant: str,
+        queries,
+        *,
+        max_staleness_points: Optional[int] = None,
+        max_staleness_ingests: Optional[int] = None,
+    ) -> QueryResult:
+        """Submit and await one query row-batch."""
+        loop = asyncio.get_running_loop()
+        ticket = self.core.submit(
+            tenant,
+            queries,
+            max_staleness_points=max_staleness_points,
+            max_staleness_ingests=max_staleness_ingests,
+        )
+        if ticket.done:  # cache hit (rejection raised inside submit)
+            return ticket.result
+        fut: asyncio.Future = loop.create_future()
+
+        def _wake(t: Ticket) -> None:
+            if fut.done():
+                return
+            if t.state == "done":
+                fut.set_result(t.result)
+            else:
+                fut.set_exception(
+                    AdmissionError(t.error or "rejected", tenant=t.tenant)
+                )
+
+        ticket.waiter = _wake
+        self._arm(loop)
+        return await fut
+
+    async def drain(self) -> int:
+        """Flush everything pending (shutdown path)."""
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        return self.core.drain()
+
+    def _arm(self, loop) -> None:
+        due = self.core.due()
+        if due is None:
+            return
+        delay = max(0.0, due - self.core.clock.now())
+        if self._timer is not None:
+            self._timer.cancel()
+        self._timer = loop.call_later(delay, self._fire, loop)
+
+    def _fire(self, loop) -> None:
+        self._timer = None
+        self.core.flush()
+        self._arm(loop)  # more buckets may still be open

@@ -32,16 +32,22 @@ import numpy as np
 from ..analysis import compiled_path
 from ..kernels.pairwise_dist import ops as pd
 
-__all__ = ["QueryResult", "QueryEngine"]
+__all__ = ["QueryResult", "QueryEngine", "bucket_size"]
 
 _MIN_BATCH = 64  # smallest compiled bucket: tiny batches share one program
 
 
-def _bucket_size(n: int) -> int:
+def bucket_size(n: int) -> int:
+    """Smallest power-of-two compiled-batch bucket holding ``n`` rows — the
+    shape policy shared by the query engine, the frontier solve, and the
+    serving frontend's micro-batcher."""
     b = _MIN_BATCH
     while b < n:
         b <<= 1
     return b
+
+
+_bucket_size = bucket_size  # back-compat alias (session imports the old name)
 
 
 @compiled_path("query.assign_min", kind="factory")

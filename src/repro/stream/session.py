@@ -226,6 +226,29 @@ class StreamingSession:
         return self._centers
 
     @property
+    def version(self) -> int:
+        """Serving-model version (bumped by every solve)."""
+        return self._version
+
+    @property
+    def ingests(self) -> int:
+        """Total ingest calls so far."""
+        return self._ingests
+
+    @property
+    def generation(self) -> tuple:
+        """``(version, ingests)`` — the serving tier's cache key.  Any ingest
+        or re-solve changes it, so cached assignment answers keyed by it can
+        never outlive the model state that produced them."""
+        return (self._version, self._ingests)
+
+    def ensure_model(self) -> np.ndarray:
+        """Serving centers, solving once if no model exists yet."""
+        if self._centers is None:
+            self.solve()
+        return self._centers
+
+    @property
     def staleness(self) -> dict:
         """Ingestion that the current serving model has not seen."""
         return {

@@ -27,6 +27,7 @@ Two recovery paths:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -53,6 +54,21 @@ from .train_step import (
 )
 
 __all__ = ["TrainerConfig", "Trainer"]
+
+
+# Process-wide jit caches keyed on the (hashable, frozen) config objects:
+# trainers are cheap to construct (tests build dozens), the lowered step is
+# not — a per-instance ``jax.jit`` re-lowers the whole model each time.
+@functools.lru_cache(maxsize=None)
+def _jitted_train_step(cfg, ctx, opt_cfg, compression):
+    return jax.jit(make_train_step(cfg, ctx, opt_cfg, compression=compression))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_apply_fn(opt_cfg, num_shards, compression):
+    return jax.jit(
+        make_recovered_apply_fn(opt_cfg, num_shards, compression=compression)
+    )
 
 
 @dataclasses.dataclass
@@ -147,8 +163,8 @@ class Trainer:
         if tcfg.device_recovery:
             self._init_device_recovery()
         else:
-            self._step_fn = jax.jit(
-                make_train_step(cfg, self.ctx, self.opt_cfg, compression=tcfg.compression)
+            self._step_fn = _jitted_train_step(
+                cfg, self.ctx, self.opt_cfg, tcfg.compression
             )
         self.history: list[dict] = []
 
@@ -161,10 +177,8 @@ class Trainer:
         # Stable per-trainer function objects: the executor keys its jit
         # cache on fn identity, so these must be created exactly once.
         self._group_fn = make_group_grad_fn(self.cfg, self.ctx)
-        self._apply_fn = jax.jit(
-            make_recovered_apply_fn(
-                self.opt_cfg, self.plan.num_shards, compression=tcfg.compression
-            )
+        self._apply_fn = _jitted_apply_fn(
+            self.opt_cfg, self.plan.num_shards, tcfg.compression
         )
         self._place_resident(full=False)
         self.plan.session.add_patch_listener(self._on_patch)

@@ -448,12 +448,15 @@ def test_jaxpr_audit_unregistered_path_fails():
     assert not audit.registered and not audit.ok
 
 
-def test_hot_path_specs_cover_the_three_tiers():
+def test_hot_path_specs_cover_the_four_tiers():
     from repro.analysis.hotpaths import hot_path_specs
 
     specs = hot_path_specs()
     names = {s.registry_name for s in specs}
-    assert names == {"train.train_step", "local.masked_reduce", "query.assign_min"}
+    assert names == {
+        "train.train_step", "local.masked_reduce", "query.assign_min",
+        "serve.batch_assign",
+    }
 
 
 def test_rules_table_consistent():

@@ -67,9 +67,16 @@ def test_auto_respects_streaming_budget():
     assert dispatch.resolve("assign_min", "auto", x_small, c_small).name == "xla_ref"
     # jax.eval_shape-style structs carry .shape, enough for the selector —
     # no giant arrays needed to probe the policy.
+    # Past the materialization budget but with k*d inside the broadcast
+    # budget, the ladder's middle rung wins (PR 7: this exact shape was the
+    # 1.56 s chunked hot spot).
     x_big = jax.ShapeDtypeStruct((1 << 17, 32), jnp.float32)
     c_big = jax.ShapeDtypeStruct((1 << 11, 32), jnp.float32)
-    assert dispatch.resolve("assign_min", "auto", x_big, c_big).name == "xla_chunked"
+    assert dispatch.resolve("assign_min", "auto", x_big, c_big).name == "xla_broadcast"
+    # Blow the broadcast budget too (k*d = 2^21 elems) -> chunked streaming.
+    x_huge = jax.ShapeDtypeStruct((1 << 17, 1 << 10), jnp.float32)
+    c_huge = jax.ShapeDtypeStruct((1 << 11, 1 << 10), jnp.float32)
+    assert dispatch.resolve("assign_min", "auto", x_huge, c_huge).name == "xla_chunked"
 
 
 def test_interpret_env_var_forces_interpret(monkeypatch):

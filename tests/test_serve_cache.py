@@ -1,0 +1,227 @@
+"""Assignment-result cache correctness.
+
+Unit tests for :class:`AssignmentCache` (LRU mechanics, quantized keys,
+eager invalidation) plus the frontend-integrated behaviours the ISSUE pins:
+hit on repeat query, miss + invalidate on ingest and on model-version bump,
+and a randomized property test that a cached answer can never violate a
+per-query staleness bound (generation-keyed entries always report exactly
+the live staleness).
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve import AdmissionError, AssignmentCache, ServingFrontend, VirtualClock
+from repro.stream import StreamingSession
+from repro.stream.query import QueryResult
+
+D, K = 3, 3
+
+
+def make_session(seed=0):
+    rng = np.random.default_rng(seed)
+    s = StreamingSession(d=D, k=K, num_nodes=4, leaf_size=64, seed=seed)
+    s.ingest(rng.normal(size=(200, D)).astype(np.float32))
+    s.solve()
+    return s
+
+
+def make_frontend(session, **kw):
+    clk = VirtualClock()
+    fe = ServingFrontend(
+        window=0.001, max_batch=64, cache_size=kw.pop("cache_size", 128),
+        clock=clk, **kw,
+    )
+    fe.add_tenant("a", session)
+    return fe, clk
+
+
+def _answer(fe, clk, q, **bounds):
+    t = fe.submit("a", q, **bounds)
+    if not t.done:
+        clk.advance(fe.batcher.window)
+        fe.flush()
+    assert t.state == "done"
+    return t
+
+
+# ----------------------------------------------------------------- unit
+
+
+def _res(i):
+    return QueryResult(
+        np.array([i], np.int32), np.zeros((1,), np.float32), 0, 0, 1
+    )
+
+
+def test_lru_hit_miss_eviction():
+    c = AssignmentCache(maxsize=2)
+    q = np.ones((1, 4), np.float32)
+    k1 = c.key("t", (1, 0), q)
+    assert c.get(k1) is None and c.misses == 1
+    c.put(k1, _res(1))
+    assert c.get(k1).indices[0] == 1 and c.hits == 1
+    k2 = c.key("t", (1, 0), 2 * q)
+    k3 = c.key("t", (1, 0), 3 * q)
+    c.put(k2, _res(2))   # k2 now newer than k1's last touch
+    c.put(k3, _res(3))   # capacity 2 → k1 (least recently touched) evicted
+    assert c.evictions == 1
+    assert c.get(k2) is not None and c.get(k1) is None
+    assert 0.0 < c.hit_rate < 1.0
+
+
+def test_quantized_keys_match_near_duplicates_only():
+    c = AssignmentCache(maxsize=8, quantize=6)
+    q = np.array([[0.123456789, 1.0]], np.float32)
+    jitter = q + 1e-9   # below the quantization step → same key
+    other = q + 1e-3    # above → different key
+    assert c.key("t", (1, 0), q) == c.key("t", (1, 0), jitter)
+    assert c.key("t", (1, 0), q) != c.key("t", (1, 0), other)
+
+
+def test_generation_and_tenant_partition_the_key_space():
+    c = AssignmentCache(maxsize=8)
+    q = np.ones((2, 3), np.float32)
+    assert c.key("a", (1, 0), q) != c.key("b", (1, 0), q)
+    assert c.key("a", (1, 0), q) != c.key("a", (1, 1), q)  # ingest bump
+    assert c.key("a", (1, 0), q) != c.key("a", (2, 0), q)  # version bump
+    assert c.key("a", (1, 0), q) != c.key("a", (1, 0), q.reshape(3, 2))
+
+
+def test_invalidate_is_eager_and_generation_scoped():
+    c = AssignmentCache(maxsize=16)
+    q = np.ones((1, 2), np.float32)
+    for gen in [(1, 0), (1, 1), (2, 2)]:
+        c.put(c.key("a", gen, q), _res(0))
+    c.put(c.key("b", (1, 0), q), _res(9))
+    assert c.invalidate("a", keep_generation=(2, 2)) == 2
+    assert len(c) == 2  # a@(2,2) and b survive
+    assert c.invalidate("a") == 1
+    assert c.get(c.key("b", (1, 0), q)) is not None
+    assert c.invalidations == 3
+
+
+def test_zero_size_cache_never_stores():
+    c = AssignmentCache(maxsize=0)
+    k = c.key("t", (1, 0), np.ones((1, 2), np.float32))
+    c.put(k, _res(1))
+    assert c.get(k) is None and len(c) == 0
+
+
+# ------------------------------------------------------------ integration
+
+
+def test_hit_on_repeat_query():
+    sess = make_session()
+    fe, clk = make_frontend(sess)
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    t1 = _answer(fe, clk, q)
+    assert not t1.from_cache and fe.dispatches == 1
+    t2 = _answer(fe, clk, q)
+    # Answered at submit time from the cache: no second dispatch.
+    assert t2.from_cache and fe.dispatches == 1
+    np.testing.assert_array_equal(t2.result.indices, t1.result.indices)
+    np.testing.assert_array_equal(t2.result.distances, t1.result.distances)
+    assert fe.cache.hits == 1
+
+
+def test_near_duplicate_query_hits():
+    sess = make_session()
+    fe, clk = make_frontend(sess)
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(2, D)).astype(np.float32)
+    _answer(fe, clk, q)
+    t = _answer(fe, clk, q + 1e-8)  # float jitter under the quantization step
+    assert t.from_cache
+
+
+def test_miss_and_invalidate_on_ingest():
+    sess = make_session()
+    fe, clk = make_frontend(sess)
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(3, D)).astype(np.float32)
+    t1 = _answer(fe, clk, q)
+    sess.ingest(rng.normal(size=(30, D)))  # generation bump: (v, i) → (v, i+1)
+    t2 = _answer(fe, clk, q)
+    assert not t2.from_cache and fe.dispatches == 2
+    # The fresh answer carries the fresh staleness, not the cached one's.
+    assert t1.result.staleness_points == 0
+    assert t2.result.staleness_points == 30
+
+
+def test_miss_and_invalidate_on_version_bump():
+    sess = make_session()
+    fe, clk = make_frontend(sess)
+    rng = np.random.default_rng(4)
+    q = rng.normal(size=(3, D)).astype(np.float32)
+    t1 = _answer(fe, clk, q)
+    sess.ingest(rng.normal(size=(100, D)))
+    sess.solve()  # version bump; staleness resets to 0
+    t2 = _answer(fe, clk, q)
+    assert not t2.from_cache
+    assert t2.result.version == t1.result.version + 1
+    assert t2.result.staleness_points == 0
+
+
+def test_cached_hit_still_subject_to_admission():
+    sess = make_session()
+    fe, clk = make_frontend(sess)
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(2, D)).astype(np.float32)
+    sess.ingest(rng.normal(size=(20, D)))
+    _answer(fe, clk, q)  # cached at staleness 20
+    # A repeat of the same query with a violated bound must be REJECTED, not
+    # served from the (bound-violating) cache entry.
+    with pytest.raises(AdmissionError):
+        fe.submit("a", q, max_staleness_points=10)
+    # With a satisfiable bound the cached answer is served.
+    t = fe.submit("a", q, max_staleness_points=20)
+    assert t.from_cache
+
+
+# --------------------------------------------------------------- property
+
+
+def test_property_cached_answers_never_violate_staleness_bounds():
+    """Randomized ingest/solve/query schedule: every answer — cached or
+    fresh — must (a) satisfy the bound it was admitted under and (b) agree
+    with a trusted direct computation at serve time."""
+    rng = np.random.default_rng(42)
+    sess = make_session(seed=7)
+    fe, clk = make_frontend(sess, cache_size=64)
+    pool = [rng.normal(size=(m, D)).astype(np.float32) for m in (1, 2, 3)]
+    served = rejected = hits = 0
+    for step in range(120):
+        act = rng.random()
+        if act < 0.25:
+            sess.ingest(rng.normal(size=(int(rng.integers(1, 40)), D)))
+        elif act < 0.35:
+            sess.solve()
+        else:
+            q = pool[int(rng.integers(len(pool)))]
+            bound = int(rng.integers(0, 120)) if rng.random() < 0.5 else None
+            live = sess.staleness["points"]
+            try:
+                t = fe.submit("a", q, max_staleness_points=bound)
+            except AdmissionError:
+                rejected += 1
+                assert bound is not None and live > bound
+                continue
+            if not t.done:
+                clk.advance(fe.batcher.window)
+                fe.flush()
+            assert t.state == "done"
+            served += 1
+            hits += t.from_cache
+            # (a) the bound held at serve time;
+            if bound is not None:
+                assert t.result.staleness_points <= bound
+            # (b) the answer equals the trusted synchronous path, and its
+            # reported staleness is the live one (generation-keyed entries
+            # cannot resurface an older generation's answer or bound).
+            ref = sess.query(q)
+            np.testing.assert_array_equal(t.result.indices, ref.indices)
+            assert t.result.staleness_points == ref.staleness_points
+            assert t.result.version == ref.version
+    assert served > 30 and hits > 5 and rejected > 0  # schedule hit all paths
