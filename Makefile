@@ -5,13 +5,16 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all test-cov lint docs-check bench-kernels bench-scenarios bench-serve bench-stream bench-train bench
+.PHONY: test test-all test-cov lint docs-check check-bench bench-kernels bench-scenarios bench-serve bench-stream bench-train bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: lint docs-check bench-scenarios bench-serve bench-stream bench-train test-cov  ## everything, including compile-heavy slow-marked smoke tests
+test-all: lint docs-check bench-kernels bench-scenarios bench-serve bench-stream bench-train check-bench test-cov  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
+
+check-bench:  ## perf regression gate: fresh BENCH_kernels/serve rows vs tools/bench_baseline.json (>25% slower fails; --update-baseline to accept)
+	$(PY) tools/check_bench.py
 
 lint:  ## jit-safety static analysis (AST lint + jaxpr/HLO hot-path audit) → ANALYSIS.json
 	timeout 300 $(PY) tools/lint.py

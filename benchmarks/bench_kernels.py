@@ -42,11 +42,36 @@ def run() -> None:
 
     # ---------------------------------------------------------- assign_min
     auto_name = dispatch.resolve("assign_min", "auto", x, c).name
-    us, (idx_a, dist_a) = timed(pd_ops.assign_min, x, c, iters=5)
-    emit("assign_min_auto", us, f"impl={auto_name}")
+    us_auto, (idx_a, dist_a) = timed(pd_ops.assign_min, x, c, iters=5)
+    us_ref, _ = timed(pd_ops.assign_min, x, c, impl="xla_ref", iters=5)
+    emit("assign_min_ref", us_ref, "impl=xla_ref (measured baseline)")
+    us_bc, _ = timed(pd_ops.assign_min, x, c, impl="xla_broadcast", iters=5)
+    emit("assign_min_broadcast", us_bc, "impl=xla_broadcast")
+    best_us = min(us_ref, us_bc)
+    emit(
+        "assign_min_auto", us_auto,
+        f"impl={auto_name} vs_best_measured={us_auto / best_us:.2f}x",
+    )
+    # Before/after for the chunked recalibration: the old policy sized the
+    # center chunk from the materialization budget alone (bk=1024 — which at
+    # k=512 pads HALF the tile with masked columns), 3.8× slower than ref at
+    # this shape.  The "before" row pins that policy so the fix stays
+    # measured rather than remembered.
+    us_before, _ = timed(
+        jax.jit(lambda a, b: pd_ops._assign_min_chunked_bk(a, b, 1024)),
+        x, c, iters=5,
+    )
+    emit(
+        "assign_min_chunked_before", us_before,
+        "impl=xla_chunked bk=1024 (pre-recalibration policy)",
+    )
     us, (idx_c, dist_c) = timed(pd_ops.assign_min, x, c, impl="xla_chunked", iters=5)
     err = float(jnp.max(jnp.abs(dist_c - dist_a)))
-    emit("assign_min_chunked", us, f"impl=xla_chunked max_err={err:.2e}")
+    emit(
+        "assign_min_chunked", us,
+        f"impl=xla_chunked max_err={err:.2e} "
+        f"speedup_vs_before={us_before / us:.2f}x vs_ref={us / us_ref:.2f}x",
+    )
     # Streaming shape: n·k past the materialization budget.  The "before"
     # row pins the pre-ladder auto pick at this shape (xla_chunked — the
     # 1.56 s hot spot the strategy ladder was built to kill), so the win
@@ -79,10 +104,15 @@ def run() -> None:
     q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
-    us, o_ref = timed(
+    us_ref, o_ref = timed(
         lambda: fa_ops.flash_attention(q, k, v, causal=True, impl="ref"), iters=3
     )
-    emit("attention_ref", us, "impl=xla_ref")
+    emit("attention_ref", us_ref, "impl=xla_ref (measured baseline)")
+    us_ch, _ = timed(
+        lambda: fa_ops.flash_attention(q, k, v, causal=True, impl="xla_chunked"),
+        iters=3,
+    )
+    emit("attention_chunked", us_ch, "impl=xla_chunked")
     auto_name = dispatch.resolve(
         "flash_attention", "auto", q, k, v, causal=True, window=None, scale=None
     ).name
@@ -90,7 +120,11 @@ def run() -> None:
         lambda: fa_ops.flash_attention(q, k, v, causal=True), iters=3
     )
     err = float(jnp.max(jnp.abs(o_auto - o_ref)))
-    emit("attention_auto", us, f"impl={auto_name} max_err={err:.2e}")
+    best_us = min(us_ref, us_ch)
+    emit(
+        "attention_auto", us,
+        f"impl={auto_name} max_err={err:.2e} vs_best_measured={us / best_us:.2f}x",
+    )
 
     # -------------------------------------------- interpret (debug opt-in)
     if _bench_interpret():

@@ -113,6 +113,39 @@ def run() -> None:
         f"repeat_fraction={REPEAT_FRACTION}",
     )
 
+    # ------------------------------------------------------ warm-start rows
+    # The SLO the warm-start machinery is written against: after a model
+    # generation bump, the FIRST query into a previously-observed bucket must
+    # land near steady-state p50 — not pay lowering + compile in line.
+    p50_us = pct(0.50)
+
+    async def _one(q):
+        t0 = time.perf_counter()
+        await af.query("t0", q)
+        return (time.perf_counter() - t0) * 1e6
+
+    # Cold control: drop the compiled-dispatch cache and query without any
+    # warmup — this is what every post-restart first query used to cost.
+    _batch_assign_fn.cache_clear()
+    cold = asyncio.run(_one(rng.normal(size=(4, D)).astype(np.float32)))
+    emit(
+        "serve_first_query_cold", cold,
+        f"vs_p50={cold / p50_us:.1f}x (compile cache dropped, no warmup)",
+    )
+    # Warmed: drop the cache again, then bump the model generation (ingest +
+    # solve).  The solve listener fires ServingFrontend.warmup, which
+    # recompiles every observed (bucket, d) before traffic arrives.
+    _batch_assign_fn.cache_clear()
+    sess = af.core.tenant("t0").session
+    sess.ingest(rng.normal(size=(2048, D)).astype(np.float32))
+    sess.solve()  # generation bump → auto warm-start
+    warm = asyncio.run(_one(rng.normal(size=(4, D)).astype(np.float32)))
+    emit(
+        "serve_first_query_warmed", warm,
+        f"vs_p50={warm / p50_us:.2f}x warmups={af.core.stats['warmups']} "
+        "(first query after generation bump, auto-warmed)",
+    )
+
 
 if __name__ == "__main__":
     run()

@@ -27,6 +27,15 @@ def _limit(default: int) -> int:
 
 
 def pytest_configure(config):
+    # Hermetic autotune persistence: without this, measured-first dispatch
+    # would write winners to (and read stale winners from) the developer's
+    # real ~/.cache/repro during the suite, making tests order- and
+    # machine-history-dependent.  Tests that assert on persistence set their
+    # own directory; setdefault keeps an explicit user override working.
+    os.environ.setdefault(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(str(config.rootpath), ".pytest_cache", "autotune"),
+    )
     if config.pluginmanager.hasplugin("timeout"):
         if not config.getoption("--timeout", None):
             config.option.timeout = _limit(120)  # slowest known test ≈ 86 s

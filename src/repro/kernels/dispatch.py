@@ -1,4 +1,4 @@
-"""Backend-aware kernel dispatch + autotune — shared by every kernel family.
+"""Backend-aware kernel dispatch — shared by every kernel family.
 
 The three kernel families (``pairwise_dist``, ``weighted_segsum``,
 ``flash_attention``) register *named implementations* here instead of each
@@ -17,41 +17,63 @@ Resolution rules (``resolve(op, impl, ...)``):
 * Legacy per-op aliases (``"pallas"``, ``"ref"``, ``"chunked"``) map onto
   canonical names so existing call sites keep working.
 
-The module also owns the two cross-op sizing policies that used to live as
-per-op magic numbers (``1 << 14`` / ``1 << 16`` cutoffs, ``_pick_blocks``):
+The module also owns the *analytic* cross-op sizing policies:
 
 * :func:`pick_blocks` — one VMEM-aware block-size model: choose ``(bn, bk)``
   so the f32 working set ``(bn·d + bk·d + bn·bk)·itemsize`` fits a VMEM
   budget, preferring MXU-aligned powers of two.
 * :func:`should_stream` — whether an op should take a chunked/streaming path
   instead of materializing an ``(n, k)`` intermediate.
+* :func:`ladder_strategy` — the ref/broadcast/chunked assignment ladder.
 
-On top of the model sits an optional *measured* autotune cache
-(:func:`tuned_block_config`), keyed on ``(op, backend, device-kind,
-shape-bucket, dtype)`` and enabled with ``REPRO_AUTOTUNE=1``: candidate block
-configs are timed on synthetic inputs once per bucket and the winner is
-cached for the process **and persisted to disk**, so a later process on the
-same (backend, device kind) — e.g. every TPU run after the first — loads the
-measured winners instead of re-measuring.  One JSON file per (backend,
-device kind) under ``~/.cache/repro`` by default; ``REPRO_AUTOTUNE_CACHE``
-overrides the directory (``0``/``off`` disables persistence).  A corrupted
-or foreign cache file is ignored and overwritten by the next measurement.
+These analytic models are **priors, not verdicts**: selection is
+measured-first by default.  The measurement machinery — shape-bucketed
+timing, the budgeted candidate pass, the versioned persistent cache, and
+the ``warmup(plan)`` API — lives in :mod:`repro.kernels.autotune` and is
+re-exported here for backward compatibility (``dispatch.tuned_strategy``,
+``dispatch.autotune_cache_info``, ... keep working).  Opt out with
+``REPRO_AUTOTUNE=0`` to fall back to the pure analytic models.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import re
-import tempfile
-import time
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Sequence, Tuple
 
-import jax
+# Back-compat re-exports: the measured-autotune subsystem grew out of this
+# module and its public names remain reachable from ``dispatch``.  The cache
+# dicts are shared objects (not copies), so introspection/monkeypatching of
+# ``dispatch._AUTOTUNE_CACHE`` et al. still observes the live state.
+from .autotune import (  # noqa: F401
+    AUTOTUNE_CACHE_ENV,
+    AUTOTUNE_ENV,
+    BlockConfig,
+    WarmupReport,
+    _AUTOTUNE_CACHE,
+    _AUTOTUNE_STATS,
+    _PERSIST_VERSION,
+    _STRATEGY_CACHE,
+    _pow2_ceil,
+    _time_once,
+    autotune_cache_dir,
+    autotune_cache_file,
+    autotune_cache_info,
+    autotune_enabled,
+    backend,
+    clear_autotune_cache,
+    device_kind,
+    shape_bucket,
+    tuned_block_config,
+    tuned_strategy,
+    warm_start_enabled,
+    warmup,
+    worth_measuring,
+)
 
 __all__ = [
     "BlockConfig",
+    "WarmupReport",
     "autotune_cache_dir",
     "autotune_cache_file",
     "autotune_cache_info",
@@ -72,15 +94,16 @@ __all__ = [
     "should_stream",
     "tuned_block_config",
     "tuned_strategy",
+    "warm_start_enabled",
+    "warmup",
+    "worth_measuring",
 ]
 
-# Debug/feature env vars — read at resolution time.  The public ops resolve
-# eagerly on every call, so toggling mid-process works there; code that bakes
-# a resolution into its own jit trace (e.g. core.kmeans.lloyd) keeps the
-# value seen when its shape was first traced.
+# Debug env var — read at resolution time.  The public ops resolve eagerly on
+# every call, so toggling mid-process works there; code that bakes a
+# resolution into its own jit trace (e.g. core.kmeans.lloyd) keeps the value
+# seen when its shape was first traced.
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
-AUTOTUNE_ENV = "REPRO_AUTOTUNE"
-AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 # Default budgets of the shared sizing model.  VMEM_BUDGET bounds the per-tile
 # working set of the Pallas kernels (a conservative quarter of a TPU core's
@@ -93,33 +116,9 @@ _MXU_LANE = 128
 _SUBLANE = 8
 
 
-def backend() -> str:
-    """The JAX default backend ("cpu" | "gpu" | "tpu")."""
-    return jax.default_backend()
-
-
-def device_kind() -> str:
-    """Filesystem-safe kind of device 0 (e.g. "cpu", "TPU-v4", "NVIDIA-A100").
-
-    Finer-grained than :func:`backend`: measured autotune winners transfer
-    between processes only within the same hardware generation, so the
-    persistent cache is keyed on (backend, device kind).
-    """
-    try:
-        kind = jax.devices()[0].device_kind
-    except Exception:  # pragma: no cover - no devices initialized
-        kind = "unknown"
-    return re.sub(r"[^A-Za-z0-9_.-]+", "-", str(kind)).strip("-") or "unknown"
-
-
 def interpret_enabled() -> bool:
     """Debug override: force interpret-mode Pallas everywhere."""
     return os.environ.get(INTERPRET_ENV, "").lower() in ("1", "true", "yes")
-
-
-def autotune_enabled() -> bool:
-    """Whether measured autotuning (vs. the analytic model alone) is on."""
-    return os.environ.get(AUTOTUNE_ENV, "").lower() in ("1", "true", "yes")
 
 
 # --------------------------------------------------------------- registry
@@ -225,16 +224,6 @@ def dispatch(op: str, impl: str, *args: Any, **kwargs: Any) -> Any:
 # ------------------------------------------------------- block-size model
 
 
-@dataclasses.dataclass(frozen=True)
-class BlockConfig:
-    bn: int
-    bk: int
-
-
-def _pow2_ceil(x: int) -> int:
-    return 1 << max(int(x) - 1, 1).bit_length()
-
-
 def pick_blocks(
     n: int,
     k: int,
@@ -299,319 +288,12 @@ def ladder_strategy(
       over the whole n: the only rung whose resident state is O(n) no matter
       how large k·d grows.
 
-    Pure shape policy — callers refine the choice per measured shape bucket
-    via :func:`tuned_strategy` when ``REPRO_AUTOTUNE=1``.
+    Pure shape *prior* — by default callers refine the choice per measured
+    shape bucket via :func:`repro.kernels.autotune.tuned_strategy`
+    (measured-first; ``REPRO_AUTOTUNE=0`` opts out to this ladder alone).
     """
     if n * k * itemsize <= materialize_budget:
         return "ref"
     if k * d <= broadcast_elems:
         return "broadcast"
     return "chunked"
-
-
-# ---------------------------------------------------------- autotune cache
-
-
-def shape_bucket(v: int) -> int:
-    """Next power of two — ragged shapes share one cache entry per octave."""
-    return _pow2_ceil(v)
-
-
-_AUTOTUNE_CACHE: Dict[tuple, BlockConfig] = {}
-# Measured *strategy* winners (ladder rung per shape bucket) — same keying as
-# the block-config cache, but the cached value is a canonical impl name.
-_STRATEGY_CACHE: Dict[tuple, str] = {}
-_AUTOTUNE_STATS = {
-    "hits": 0, "misses": 0, "measured": 0, "errors": 0,
-    "disk_loaded": 0, "disk_errors": 0,
-}
-# Which persistent file the in-memory cache has been hydrated from (None =
-# not yet).  Re-checked per lookup so a monkeypatched env var / device kind
-# (tests) or a cleared cache triggers a fresh load.
-_PERSIST_LOADED_FROM: Optional[str] = None
-_PERSIST_VERSION = 1
-
-
-def clear_autotune_cache() -> None:
-    """Forget all in-memory winners and stats (the on-disk cache survives;
-    delete :func:`autotune_cache_file` to force re-measurement on disk too)."""
-    global _PERSIST_LOADED_FROM
-    _AUTOTUNE_CACHE.clear()
-    _STRATEGY_CACHE.clear()
-    _PERSIST_LOADED_FROM = None
-    for k in _AUTOTUNE_STATS:
-        _AUTOTUNE_STATS[k] = 0
-
-
-def autotune_cache_info() -> dict:
-    return {
-        "entries": dict(_AUTOTUNE_CACHE),
-        "strategies": dict(_STRATEGY_CACHE),
-        **_AUTOTUNE_STATS,
-    }
-
-
-# ------------------------------------------------- persistent autotune cache
-
-
-def autotune_cache_dir() -> Optional[str]:
-    """Directory for persisted winners; None disables persistence.
-
-    ``REPRO_AUTOTUNE_CACHE`` overrides (``0``/``off``/``none`` to disable);
-    default is ``~/.cache/repro``.
-    """
-    v = os.environ.get(AUTOTUNE_CACHE_ENV)
-    if v is not None:
-        if v.strip().lower() in ("", "0", "off", "none", "false"):
-            return None
-        return os.path.expanduser(v)
-    return os.path.join(os.path.expanduser("~"), ".cache", "repro")
-
-
-def autotune_cache_file() -> Optional[str]:
-    """Path of the persistent cache for the CURRENT (backend, device kind).
-
-    One file per hardware flavour keeps winners measured on one machine from
-    leaking onto different silicon: a TPU-v4 pod and the CPU smoke-test
-    runner never read each other's tables.
-    """
-    d = autotune_cache_dir()
-    if d is None:
-        return None
-    return os.path.join(d, f"autotune-{backend()}-{device_kind()}.json")
-
-
-def _persist_load() -> None:
-    """Hydrate the in-memory cache from disk (idempotent per file path).
-
-    Any malformed, unreadable, or foreign (backend/device-kind mismatch)
-    file is ignored — the caller falls through to re-measurement and the
-    next save overwrites the bad file.
-    """
-    global _PERSIST_LOADED_FROM
-    path = autotune_cache_file()
-    if path is None or path == _PERSIST_LOADED_FROM:
-        return
-    _PERSIST_LOADED_FROM = path
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-        if (
-            payload.get("version") != _PERSIST_VERSION
-            or payload.get("backend") != backend()
-            or payload.get("device_kind") != device_kind()
-        ):
-            raise ValueError("cache file is for a different build or device")
-        loaded = 0
-        for e in payload["entries"]:
-            key = (
-                str(e["op"]), backend(), device_kind(),
-                tuple(int(s) for s in e["shapes"]), str(e["dtype"]),
-            )
-            cfg = BlockConfig(bn=int(e["bn"]), bk=int(e["bk"]))
-            if key not in _AUTOTUNE_CACHE:  # in-process winners take priority
-                _AUTOTUNE_CACHE[key] = cfg
-                loaded += 1
-        # Strategy winners: absent from pre-ladder cache files (same payload
-        # version — both directions stay readable).
-        for e in payload.get("strategies", []):
-            key = (
-                str(e["op"]), backend(), device_kind(),
-                tuple(int(s) for s in e["shapes"]), str(e["dtype"]),
-            )
-            if key not in _STRATEGY_CACHE:
-                _STRATEGY_CACHE[key] = str(e["choice"])
-                loaded += 1
-        _AUTOTUNE_STATS["disk_loaded"] += loaded
-    except FileNotFoundError:
-        pass
-    except Exception:
-        _AUTOTUNE_STATS["disk_errors"] += 1
-
-
-def _persist_save() -> None:
-    """Write all in-memory winners for the current (backend, device kind)
-    atomically (tmp file + rename); persistence failures never fail the op.
-
-    Disk entries this process has not seen (a concurrent process measured a
-    different shape bucket between our load and this save) are merged back
-    in rather than clobbered; in-memory winners take priority on conflicts.
-    """
-    path = autotune_cache_file()
-    if path is None:
-        return
-    b, kind = backend(), device_kind()
-    merged = {
-        (op, tuple(shapes), dtype): cfg
-        for (op, kb, kk, shapes, dtype), cfg in _AUTOTUNE_CACHE.items()
-        if kb == b and kk == kind
-    }
-    merged_strat = {
-        (op, tuple(shapes), dtype): choice
-        for (op, kb, kk, shapes, dtype), choice in _STRATEGY_CACHE.items()
-        if kb == b and kk == kind
-    }
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-        # Same gate as _persist_load: never launder entries from a corrupt,
-        # stale-version, or foreign-device file back in under a valid header.
-        if (
-            payload.get("version") == _PERSIST_VERSION
-            and payload.get("backend") == b
-            and payload.get("device_kind") == kind
-        ):
-            for e in payload["entries"]:
-                k = (str(e["op"]), tuple(int(s) for s in e["shapes"]), str(e["dtype"]))
-                merged.setdefault(k, BlockConfig(bn=int(e["bn"]), bk=int(e["bk"])))
-            for e in payload.get("strategies", []):
-                k = (str(e["op"]), tuple(int(s) for s in e["shapes"]), str(e["dtype"]))
-                merged_strat.setdefault(k, str(e["choice"]))
-    except Exception:
-        pass  # unreadable/corrupt file: overwritten below
-    entries = [
-        {"op": op, "shapes": list(shapes), "dtype": dtype, "bn": cfg.bn, "bk": cfg.bk}
-        for (op, shapes, dtype), cfg in sorted(merged.items())
-    ]
-    strategies = [
-        {"op": op, "shapes": list(shapes), "dtype": dtype, "choice": choice}
-        for (op, shapes, dtype), choice in sorted(merged_strat.items())
-    ]
-    payload = {
-        "version": _PERSIST_VERSION, "backend": b, "device_kind": kind,
-        "entries": entries, "strategies": strategies,
-    }
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(
-            dir=os.path.dirname(path), prefix=".autotune-", suffix=".tmp"
-        )
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=1)
-        os.replace(tmp, path)
-    except OSError:
-        _AUTOTUNE_STATS["disk_errors"] += 1
-
-
-def _time_once(fn: Callable[[], Any], *, reps: int = 3) -> float:
-    """Median wall time of compiled ``fn()`` executions.
-
-    Must run under ``jax.ensure_compile_time_eval()`` (the caller holds the
-    context): autotuning is typically triggered while an op is being traced,
-    and without escaping the trace the bench ops would be *staged* into the
-    caller's jaxpr — perf_counter would measure trace construction, not
-    execution.
-    """
-    # Benchmarking jit: one-shot by design, under ensure_compile_time_eval.
-    run = jax.jit(fn)  # repro-lint: disable=JS201
-    times = []
-    for _ in range(reps + 1):  # first rep warms up / compiles
-        t0 = time.perf_counter()
-        out = run()
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times = sorted(times[1:])
-    return times[len(times) // 2]
-
-
-def tuned_block_config(
-    op: str,
-    shapes: Sequence[int],
-    dtype: Any,
-    *,
-    default: BlockConfig,
-    candidates: Sequence[BlockConfig] = (),
-    bench: Optional[Callable[[BlockConfig], Callable[[], Any]]] = None,
-) -> BlockConfig:
-    """Block config for ``op`` at the given shape bucket.
-
-    Returns the analytic ``default`` unless measured autotuning is enabled
-    (``REPRO_AUTOTUNE=1``) and a ``bench`` factory is provided, in which case
-    each candidate is timed once per ``(op, backend, device-kind,
-    shape-bucket, dtype)`` key and the winner cached for the life of the
-    process AND persisted to disk (see :func:`autotune_cache_file`), so later
-    processes on the same hardware skip the measurement entirely.
-
-    ``bench(cfg)`` must return a zero-arg callable running the op with that
-    config on representative (synthetic) inputs.
-    """
-    if autotune_enabled():
-        # Hydrate measured winners from previous processes on this hardware
-        # before deciding whether to measure.  Gated on REPRO_AUTOTUNE so
-        # plain runs keep the pure analytic model (deterministic, no disk IO).
-        _persist_load()
-    key = (op, backend(), device_kind(), tuple(shape_bucket(s) for s in shapes), str(dtype))
-    cached = _AUTOTUNE_CACHE.get(key)
-    if cached is not None:
-        _AUTOTUNE_STATS["hits"] += 1
-        return cached
-    if not (autotune_enabled() and bench is not None and len(candidates) > 1):
-        # Analytic model only — deterministic and cheap, so do NOT cache it:
-        # a cached default would mask REPRO_AUTOTUNE=1 enabled later in the
-        # same process for this shape bucket.
-        return default
-    _AUTOTUNE_STATS["misses"] += 1
-    best, best_t = default, float("inf")
-    # The whole measuring block — including the bench FACTORY, which builds
-    # synthetic inputs — escapes any enclosing jit trace, so the candidates
-    # execute compiled instead of being staged as tracers.
-    with jax.ensure_compile_time_eval():
-        for cand in candidates:
-            try:
-                t = _time_once(bench(cand))
-            except Exception:  # a candidate that fails to compile never wins
-                _AUTOTUNE_STATS["errors"] += 1
-                continue
-            _AUTOTUNE_STATS["measured"] += 1
-            if t < best_t:
-                best, best_t = cand, t
-    _AUTOTUNE_CACHE[key] = best
-    _persist_save()
-    return best
-
-
-def tuned_strategy(
-    op: str,
-    shapes: Sequence[int],
-    dtype: Any,
-    *,
-    default: str,
-    candidates: Sequence[str] = (),
-    bench: Optional[Callable[[str], Callable[[], Any]]] = None,
-) -> str:
-    """Strategy (ladder-rung) choice for ``op`` at the given shape bucket.
-
-    The measured-autotune tiebreaker of :func:`ladder_strategy`: returns the
-    analytic ``default`` unless ``REPRO_AUTOTUNE=1`` and a ``bench`` factory
-    is provided, in which case each candidate *strategy name* is timed once
-    per ``(op, backend, device-kind, shape-bucket, dtype)`` key and the
-    winner cached in-process and on disk alongside the block-config winners
-    (``bench(name)`` returns a zero-arg callable running that strategy on
-    representative synthetic inputs).
-    """
-    if autotune_enabled():
-        _persist_load()
-    key = (op, backend(), device_kind(), tuple(shape_bucket(s) for s in shapes), str(dtype))
-    cached = _STRATEGY_CACHE.get(key)
-    if cached is not None and (not candidates or cached in candidates):
-        _AUTOTUNE_STATS["hits"] += 1
-        return cached
-    if not (autotune_enabled() and bench is not None and len(candidates) > 1):
-        # Analytic ladder only — not cached, for the same reason the block
-        # model's default is not: a later REPRO_AUTOTUNE=1 must still measure.
-        return default
-    _AUTOTUNE_STATS["misses"] += 1
-    best, best_t = default, float("inf")
-    with jax.ensure_compile_time_eval():
-        for cand in candidates:
-            try:
-                t = _time_once(bench(cand))
-            except Exception:  # a strategy that fails to compile never wins
-                _AUTOTUNE_STATS["errors"] += 1
-                continue
-            _AUTOTUNE_STATS["measured"] += 1
-            if t < best_t:
-                best, best_t = cand, t
-    _STRATEGY_CACHE[key] = best
-    _persist_save()
-    return best

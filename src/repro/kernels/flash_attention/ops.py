@@ -142,12 +142,51 @@ dispatch.register_alias(
     "flash_attention", "pallas",
     lambda b: "pallas_tpu" if b == "tpu" else "pallas_interpret",
 )
-dispatch.register_selector(
-    "flash_attention",
-    lambda b, q, k, v, causal, window, scale: (
-        "pallas_tpu" if b == "tpu" and window is None else "xla_chunked"
-    ),
-)
+def _select_attention(b, q, k, v, causal, window, scale):
+    """Measured-first attention impl selection.
+
+    On TPU the Pallas kernel is the pick (chunked for windowed attention).
+    Elsewhere the analytic prior is: ``xla_ref`` while the (B,H,T,S) score
+    tile fits the materialization budget — one fused softmax beats the
+    chunk bookkeeping at small sizes, which is exactly where the old
+    always-chunked policy showed no measured win — and ``xla_chunked`` past
+    it.  Worth-measuring buckets then time both once, with ref as the
+    baseline: chunked must beat ref past the noise floor to keep the pick.
+    """
+    if b == "tpu":
+        return "pallas_tpu" if window is None else "xla_chunked"
+    if window is not None:
+        return "xla_chunked"  # ref does not model sliding windows
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    score_bytes = B * H * T * S * 4
+    prior = "xla_ref" if score_bytes <= dispatch.MATERIALIZE_BUDGET else "xla_chunked"
+    if not (dispatch.autotune_enabled() and dispatch.worth_measuring(score_bytes)):
+        return prior
+    ref_feasible = score_bytes <= 4 * dispatch.MATERIALIZE_BUDGET
+    if not ref_feasible:
+        return prior
+
+    KV = k.shape[2]
+    Tb, Sb = dispatch.shape_bucket(T), dispatch.shape_bucket(S)
+
+    def bench(name):
+        qs = jnp.zeros((B, Tb, H, dh), q.dtype)
+        ks = jnp.zeros((B, Sb, KV, dh), q.dtype)
+        fn = _ref_attention if name == "xla_ref" else chunked_attention
+        return (
+            lambda qq, kk, vv: fn(qq, kk, vv, causal=causal, window=None, scale=scale),
+            (qs, ks, ks),
+        )
+
+    return dispatch.tuned_strategy(
+        "flash_attention_strategy", (B, T, H, S, KV, dh), q.dtype,
+        default=prior, candidates=("xla_ref", "xla_chunked"), bench=bench,
+        baseline="xla_ref",
+    )
+
+
+dispatch.register_selector("flash_attention", _select_attention)
 
 
 # scale is static here: it reaches the Pallas kernel as a Python constant (a

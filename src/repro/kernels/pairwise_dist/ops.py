@@ -48,6 +48,8 @@ def _tuned_cfg(op, n, k, d, dtype, interpret, run_with_cfg):
     default = dispatch.pick_blocks(n, k, d)
     if interpret:  # debug path — measuring the interpreter is meaningless
         return default
+    if not dispatch.worth_measuring(n * k * 4):
+        return default  # below the floor the model is within noise of optimal
     cands = {default}
     if default.bn > 8:
         cands.add(dispatch.BlockConfig(default.bn // 2, default.bk))
@@ -55,9 +57,11 @@ def _tuned_cfg(op, n, k, d, dtype, interpret, run_with_cfg):
         cands.add(dispatch.BlockConfig(default.bn, default.bk // 2))
 
     def bench(cfg):
+        # Synthetic inputs are BENCH ARGUMENTS (not closure constants) so
+        # the timed program cannot be constant-folded away.
         xs = jnp.zeros((dispatch.shape_bucket(n), d), dtype)
         cs = jnp.zeros((dispatch.shape_bucket(k), d), dtype)
-        return lambda: run_with_cfg(xs, cs, cfg)
+        return (lambda a, b: run_with_cfg(a, b, cfg), (xs, cs))
 
     return dispatch.tuned_block_config(
         op, (n, k, d), dtype, default=default, candidates=sorted(
@@ -111,13 +115,21 @@ def _assign_pallas(x, c, *, interpret: bool):
 # ------------------------------------------------- streaming XLA assign_min
 
 
-def _chunk_bk(n: int) -> int:
-    """Center-chunk width for the streaming path: keep the (n, bk) tile within
-    the materialization budget (the same policy that triggered streaming)."""
-    bk = 1024
-    while bk > 64 and dispatch.should_stream(n, bk):
-        bk //= 2
-    return bk
+def _chunk_bk(n: int, k: int) -> int:
+    """Center-chunk width for the streaming path, calibrated against measured
+    CPU behavior rather than the materialization budget alone.
+
+    Two findings drove the recalibration (the old ``bk=1024``-down policy ran
+    3.8× slower than ref at bench shape): (1) the per-step cost of the scan
+    body grows superlinearly in ``bk`` past ~256 on CPU — the (n, bk) score
+    tile spills cache and ``argmin``'s per-element index bookkeeping dominates
+    — while a smaller ``bk`` merely adds cheap scan iterations, so measured
+    curves are flat-to-falling all the way down to 128 even at n=65536; and
+    (2) ``bk`` must never exceed ``shape_bucket(k)`` — a 1024-wide chunk over
+    k=512 centers pads HALF the tile with masked columns that still get
+    scored.  The measured-autotune pass refines this default per shape bucket.
+    """
+    return max(64, min(128, dispatch.shape_bucket(k)))
 
 
 def _assign_min_chunked_bk(x, c, bk: int):
@@ -188,7 +200,7 @@ def _assign_min_broadcast_cfg(x, c, cfg):
         jnp.sum(cf * cf, axis=1), (0, kp - k), constant_values=_kernel.PAD_DIST
     )
 
-    def body(_, xb):
+    def body(carry, xb):
         s = (c2[None, :] - 2.0 * (xb @ cp.T)).reshape(bn, kp // kb, kb)
         bm = jnp.min(s, axis=2)                                   # (bn, kp/kb)
         wb = jnp.argmin(bm, axis=1).astype(jnp.int32)             # winning block
@@ -196,9 +208,14 @@ def _assign_min_broadcast_cfg(x, c, cfg):
         wi = jnp.argmin(win, axis=1).astype(jnp.int32)            # col in block
         smin = jnp.take_along_axis(win, wi[:, None], axis=1)[:, 0]
         x2 = jnp.sum(xb * xb, axis=1)
-        return None, (wb * kb + wi, jnp.maximum(x2 + smin, 0.0))
+        return carry, (wb * kb + wi, jnp.maximum(x2 + smin, 0.0))
 
-    _, (idx, dist) = jax.lax.scan(body, None, xp.reshape(nb // bn, bn, d))
+    # The scalar carry is a stand-in for None: an empty-pytree carry hits
+    # the 'empty' primitive, which has no eval rule when the autotune
+    # measurement pass evaluates this rung eagerly.
+    _, (idx, dist) = jax.lax.scan(
+        body, jnp.int32(0), xp.reshape(nb // bn, bn, d)
+    )
     return idx.reshape(-1)[:n], dist.reshape(-1)[:n]
 
 
@@ -206,6 +223,8 @@ def _assign_min_broadcast(x, c):
     n, d = x.shape
     k = c.shape[0]
     default = _broadcast_blocks(n, k)
+    if not dispatch.worth_measuring(n * k * 4):
+        return _assign_min_broadcast_cfg(x, c, default)
     cands = {default}
     if default.bn > 8:
         cands.add(dispatch.BlockConfig(default.bn // 2, default.bk))
@@ -215,7 +234,7 @@ def _assign_min_broadcast(x, c):
     def bench(cfg):
         xs = jnp.zeros((dispatch.shape_bucket(n), d), jnp.float32)
         cs = jnp.zeros((dispatch.shape_bucket(k), d), jnp.float32)
-        return lambda: _assign_min_broadcast_cfg(xs, cs, cfg)
+        return (lambda a, b: _assign_min_broadcast_cfg(a, b, cfg), (xs, cs))
 
     cfg = dispatch.tuned_block_config(
         "assign_min_broadcast", (n, k, d), x.dtype, default=default,
@@ -229,13 +248,18 @@ def _assign_min_chunked(x, c):
     running (min, argmin), so the (n, k) matrix is never materialized."""
     n, d = x.shape
     k = c.shape[0]
-    default_bk = _chunk_bk(n)
-    cands = sorted({max(64, default_bk // 2), default_bk, min(1024, default_bk * 2)})
+    default_bk = _chunk_bk(n, k)
+    if not dispatch.worth_measuring(n * k * 4):
+        return _assign_min_chunked_bk(x, c, default_bk)
+    # Widened search space around the calibrated default — never wider than
+    # the (padded) center count, where extra width is pure masked waste.
+    cands = sorted(b for b in (64, 128, 256, 512) if b <= dispatch.shape_bucket(k))
+    cands = cands or [default_bk]
 
     def bench(cfg):
         xs = jnp.zeros((dispatch.shape_bucket(n), d), jnp.float32)
         cs = jnp.zeros((dispatch.shape_bucket(k), d), jnp.float32)
-        return lambda: _assign_min_chunked_bk(xs, cs, cfg.bk)
+        return (lambda a, b: _assign_min_chunked_bk(a, b, cfg.bk), (xs, cs))
 
     cfg = dispatch.tuned_block_config(
         "assign_min_chunked", (n, k, d), x.dtype,
@@ -295,29 +319,50 @@ _LADDER_IMPLS = {
 }
 
 
+# Ref stays in the measured candidate set only while its (n, k) matrix is
+# merely *over budget*, not absurd — measuring a candidate that has to
+# materialize gigabytes would blow the measurement budget on a known loser.
+_REF_CANDIDATE_BUDGET = 4 * dispatch.MATERIALIZE_BUDGET
+
+
 def _select_assign(b, x, c):
-    """The SNIPPETS-1 strategy ladder: rung by n·k and k·d, with the measured
-    autotune cache as the tiebreaker between the two streaming rungs."""
+    """Measured-first rung selection for ``assign_min``.
+
+    The SNIPPETS-1 analytic ladder (ref/broadcast/chunked by n·k and k·d) is
+    the *prior*; by default every worth-measuring shape bucket times the
+    plausible rungs once (winners cached in-process and on disk) and the
+    measured pick wins.  ``xla_ref`` is the baseline: any rung that does not
+    beat it past the noise floor loses back to ref, so the auto path can
+    never pick a rung measured slower than ref.  ``REPRO_AUTOTUNE=0`` opts
+    out to the bare ladder.
+    """
     if b == "tpu":
         return "pallas_tpu"
     n, d = x.shape
     k = c.shape[0]
     impl = _LADDER_IMPLS[dispatch.ladder_strategy(n, k, d)]
-    if impl == "xla_ref":
+    if not (dispatch.autotune_enabled() and dispatch.worth_measuring(n * k * 4)):
         return impl
 
-    # Past the materialization budget both streaming rungs are plausible and
-    # the k·d threshold is only a model; with REPRO_AUTOTUNE=1 each shape
-    # bucket measures both once and the winner is cached (and persisted).
+    ref_feasible = n * k * 4 <= _REF_CANDIDATE_BUDGET
+    cands = ["xla_broadcast", "xla_chunked"]
+    if ref_feasible:
+        cands.insert(0, "xla_ref")
+
     def bench(name):
         xs = jnp.zeros((dispatch.shape_bucket(n), d), jnp.float32)
         cs = jnp.zeros((dispatch.shape_bucket(k), d), jnp.float32)
-        fn = _assign_min_broadcast if name == "xla_broadcast" else _assign_min_chunked
-        return lambda: fn(xs, cs)
+        fn = {
+            "xla_ref": _ref.assign_min_ref,
+            "xla_broadcast": _assign_min_broadcast,
+            "xla_chunked": _assign_min_chunked,
+        }[name]
+        return (fn, (xs, cs))
 
     return dispatch.tuned_strategy(
         "assign_min_strategy", (n, k, d), x.dtype, default=impl,
-        candidates=("xla_broadcast", "xla_chunked"), bench=bench,
+        candidates=tuple(cands), bench=bench,
+        baseline="xla_ref" if ref_feasible else None,
     )
 
 

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..analysis import compiled_path
+from ..kernels import autotune
 from ..kernels.pairwise_dist import ops as pd
 from ..stream.query import QueryResult, bucket_size
 from .batcher import Batch, MicroBatcher, Ticket
@@ -107,6 +108,10 @@ class TenantState:
     queries_served: int = 0
     batches: int = 0
     elastic_patches: int = 0
+    warmups: int = 0                   # warm-up passes run for this tenant
+    # (bucket, d) shape buckets this tenant's traffic has actually used —
+    # the bucket set a warm-up pass re-compiles after a generation bump.
+    observed_buckets: set = dataclasses.field(default_factory=set)
     _centers_key: object = None
     _centers_dev: object = None
 
@@ -163,6 +168,7 @@ class ServingFrontend:
         self.served = 0                  # rows answered (cache + dispatch)
         self.rejected = 0                # tickets bounced by admission
         self.dispatches = 0              # compiled batch dispatches
+        self.warmups = 0                 # warm-up passes (solves + explicit)
         self._occupancy_sum = 0.0        # Σ rows/padded-bucket per dispatch
 
     # ------------------------------------------------------------ tenants
@@ -181,6 +187,18 @@ class ServingFrontend:
                 _s, "elastic_patches", _s.elastic_patches + 1
             )
         )
+        # Re-warm this tenant after every generation bump: the solve already
+        # cold-started every hot query (new centers to upload, possibly new
+        # measured winners) — running the warm-up plan synchronously inside
+        # solve() keeps the first post-solve query at steady-state latency.
+        # REPRO_WARM_START=0 opts out (checked at fire time, not here).
+        add_listener = getattr(session, "add_solve_listener", None)
+        if add_listener is not None:
+            add_listener(
+                lambda _s, _name=name: (
+                    self.warmup(_name) if autotune.warm_start_enabled() else None
+                )
+            )
         return state
 
     def tenant(self, name: str) -> TenantState:
@@ -190,6 +208,46 @@ class ServingFrontend:
             raise KeyError(
                 f"unknown tenant {name!r}; register it with add_tenant()"
             ) from None
+
+    # ------------------------------------------------------------- warm-up
+
+    @compiled_path("serve.warmup", kind="host")
+    def warmup(self, tenant: Optional[str] = None) -> "autotune.WarmupReport":
+        """Pre-upload centers and re-compile/re-measure the shape buckets a
+        tenant's traffic has used — off the hot path.
+
+        Run for one ``tenant`` or (default) all of them.  Tenants without a
+        model yet are skipped (warm-up never forces a solve); tenants whose
+        traffic has not been observed warm the smallest bucket, where the
+        first real query lands.  Failures inside the plan are counted in the
+        report, never raised: warm-up must not take down the tier.
+        """
+        names = [tenant] if tenant is not None else list(self._tenants)
+        report = autotune.WarmupReport()
+        fn = _batch_assign_fn(self.impl)
+        for name in names:
+            state = self.tenant(name)
+            centers = state.session.centers
+            if centers is None:
+                continue
+            d = int(np.shape(centers)[1])
+            version = state.session.version
+            buckets = sorted(
+                b for (b, bd) in state.observed_buckets if bd == d
+            ) or [bucket_size(1)]
+
+            def entry(b, _state=state, _c=centers, _v=version, _d=d):
+                c_dev = _state.device_centers(_c, _v)
+                return fn(jnp.zeros((b, _d), jnp.float32), c_dev)
+
+            plan = [
+                (f"{name}[{b}x{d}]", functools.partial(entry, b))
+                for b in buckets
+            ]
+            report = report.merge(autotune.warmup(plan))
+            state.warmups += 1
+        self.warmups += 1
+        return report
 
     # ------------------------------------------------------------- submit
 
@@ -291,6 +349,7 @@ class ServingFrontend:
         bucket = bucket_size(n)
         qp = np.zeros((bucket, d), np.float32)
         qp[:n] = q  # zero padding rows are sliced off below
+        state.observed_buckets.add((bucket, d))
         c_dev = state.device_centers(centers, session.version)
         idx, dist = _batch_assign_fn(self.impl)(qp, c_dev)
         # Fetch the FULL padded arrays and slice on the host: `idx[:n]` on a
@@ -335,6 +394,7 @@ class ServingFrontend:
             "served": self.served,
             "rejected": self.rejected,
             "dispatches": self.dispatches,
+            "warmups": self.warmups,
             "occupancy": self.occupancy,
             "pending": self.batcher.pending,
             "rows_in": self.batcher.rows_in,

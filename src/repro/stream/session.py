@@ -39,6 +39,7 @@ import numpy as np
 
 from ..analysis import compiled_path
 from ..core import kmeans
+from ..kernels import autotune
 from ..core.assignment import make_assignment
 from ..core.executor import Executor
 from ..core.resilience import ElasticPolicy, ResilienceSession
@@ -131,6 +132,14 @@ class StreamingSession:
         self._ingests = 0
         self._points_at_solve = 0
         self._ingests_at_solve = 0
+        self._solve_listeners: list = []
+
+    def add_solve_listener(self, fn) -> None:
+        """Register ``fn(session)`` to run after every successful solve —
+        the hook the serving frontend uses to re-warm tenants on generation
+        bumps.  Listener exceptions propagate: a tier that must not fail on
+        warm-up wraps its own callback."""
+        self._solve_listeners.append(fn)
 
     # ------------------------------------------------------------- ingest
 
@@ -202,6 +211,14 @@ class StreamingSession:
         self._version += 1
         self._points_at_solve = self._ingested
         self._ingests_at_solve = self._ingests
+        # Warm-start the serving side of the generation bump: upload the new
+        # centers and re-touch every served query bucket off the hot path, so
+        # the first post-solve query does not pay the refresh.  Opt out with
+        # REPRO_WARM_START=0 (e.g. batch jobs that never query).
+        if autotune.warm_start_enabled():
+            self.query_engine.warmup(self._centers, self._version)
+        for fn in list(self._solve_listeners):
+            fn(self)
         return StreamSolveResult(
             centers=self._centers,
             cost=float(res.cost),
@@ -288,6 +305,7 @@ class StreamingSession:
             "summary_points": buf.summary_points,
             "queries_served": self.query_engine.queries_served,
             "query_buckets_compiled": self.query_engine.compiled_buckets,
+            "query_warmups": self.query_engine.warmups,
             "model_version": self._version,
             **{f"recovery_{k}": v for k, v in self.resilience.stats.as_dict().items()},
         }

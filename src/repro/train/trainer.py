@@ -36,6 +36,7 @@ import numpy as np
 
 from ..analysis import compiled_path
 from ..core.resilience import ElasticPolicy, ResilienceSession
+from ..kernels import autotune
 from ..core.stragglers import StragglerScenario, make_scenario
 from ..data.pipeline import RedundantDataPipeline
 from ..models import transformer as T
@@ -97,6 +98,9 @@ class TrainerConfig:
                                    # path (enforced in Trainer.__init__)
     elastic_patience: int = 0      # >0 arms ElasticPolicy(patience=...)
     patch_headroom: int = 1        # spare shard slots per group for patches
+    warm_start: bool = True        # pre-compile the step (one discarded
+                                   # all-alive execution) before the loop;
+                                   # REPRO_WARM_START=0 also disables it
     resident_steps: int = 4        # device-resident step batches, cycled by
                                    # step % resident_steps — the fused path
                                    # trains over this FIXED pool (epoch-style
@@ -167,6 +171,7 @@ class Trainer:
                 cfg, self.ctx, self.opt_cfg, tcfg.compression
             )
         self.history: list[dict] = []
+        self.warmup_report: Optional[autotune.WarmupReport] = None
 
     # ------------------------------------------- mesh-native resident state
 
@@ -293,6 +298,47 @@ class Trainer:
         }
         return state, record
 
+    # ------------------------------------------------------------- warm-up
+
+    def warmup(self, state: Optional[TrainState] = None) -> "autotune.WarmupReport":
+        """Pre-compile the train step before the loop: ONE throwaway
+        all-alive step whose result state is discarded.
+
+        Executing (not just lowering) the step both compiles the program the
+        loop will reuse and triggers any pending autotune measurement for
+        its kernels, and on the mesh-native path it also seeds the pattern
+        cache with the all-alive pattern.  Session counters are snapshotted
+        and restored so the extra step is invisible to every stat the tests
+        and benches assert on — only wall clock (reported) is spent.
+        """
+        if state is None:
+            state, _ = self.init_state()
+        alive = np.ones(self.tcfg.num_groups, dtype=bool)
+        sess = self.plan.session
+        stats_snapshot = dataclasses.replace(sess.stats)
+
+        def one_step():
+            if self.tcfg.device_recovery:
+                warm_state, _ = self._device_recovery_step(state, 0, alive)
+                return warm_state.params
+            batch = {
+                "tokens": jnp.asarray(self.pipeline.batch(0)),
+                # All-alive weights: compilation only depends on shape/dtype,
+                # and the warm state is discarded — the elastic manager is
+                # deliberately NOT consulted (its streak state must not see
+                # a synthetic round).
+                "group_weights": jnp.ones(self.tcfg.num_groups, jnp.float32),
+            }
+            warm_state, _ = self._step_fn(state, batch)
+            return warm_state.params
+
+        try:
+            report = autotune.warmup([("train_step", one_step)])
+        finally:
+            sess.stats.__dict__.update(stats_snapshot.__dict__)
+        self.warmup_report = report
+        return report
+
     # -------------------------------------------------------------- loop
 
     def run(
@@ -306,6 +352,13 @@ class Trainer:
             state, resumed = self.init_state()
             start_step = resumed if start_step is None else start_step
         start_step = start_step or 0
+        if (
+            self.tcfg.warm_start
+            and autotune.warm_start_enabled()
+            and self.warmup_report is None
+            and start_step < self.tcfg.steps
+        ):
+            self.warmup(state)
         for step in range(start_step, self.tcfg.steps):
             if self.tcfg.simulate_stragglers:
                 srec = next(self.scenario)

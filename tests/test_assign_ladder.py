@@ -95,7 +95,12 @@ def test_ladder_strategy_thresholds():
     assert dispatch.ladder_strategy(10**6, 10**5, 128) == "chunked"
 
 
-def test_selector_follows_the_ladder():
+def test_selector_follows_the_ladder(monkeypatch):
+    # Opted out of measurement, the selector IS the analytic ladder — the
+    # pure shape policy asserted here.  (Measured-first default would time
+    # real kernels at these shapes; that path is covered in test_autotune.)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+
     class Spec:
         def __init__(self, shape):
             self.shape = shape
@@ -110,6 +115,9 @@ def test_selector_follows_the_ladder():
 
 
 def test_public_auto_path_matches_ref_in_every_regime(monkeypatch):
+    # Default env (measured-first ON): every shape here is below the
+    # worth_measuring floor, so "auto" runs the pure analytic ladder — which
+    # doubles as the floor's regression test (no measurement at tiny sizes).
     monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
     # Shrink both thresholds so each rung is genuinely selected by "auto" at
     # test-friendly sizes, then check the public path end-to-end.  (The
@@ -136,7 +144,8 @@ def test_public_auto_path_matches_ref_in_every_regime(monkeypatch):
 
 
 def test_tuned_strategy_defaults_and_cache_discipline(monkeypatch):
-    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    # Measured-first is the DEFAULT now, so opting out takes an explicit 0.
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
     dispatch.clear_autotune_cache()
     # Autotune off → the analytic default comes back, uncached.
     got = dispatch.tuned_strategy(

@@ -1,6 +1,6 @@
-"""Persistent autotune cache: roundtrip, device-kind isolation, corruption.
+"""Persistent autotune cache: roundtrip, isolation, corruption, concurrency.
 
-These drive :func:`repro.kernels.dispatch.tuned_block_config` with a toy
+These drive :func:`repro.kernels.autotune.tuned_block_config` with a toy
 bench (no real kernels) so they run in milliseconds; the two-process
 behaviour is simulated by clearing the in-memory cache between calls — the
 disk file is the only state that survives a ``clear_autotune_cache()``,
@@ -9,11 +9,12 @@ exactly like a process restart.
 
 import json
 import os
+import tempfile
 
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import dispatch
+from repro.kernels import autotune, dispatch
 
 
 @pytest.fixture(autouse=True)
@@ -61,10 +62,11 @@ def test_roundtrip_write_then_load_without_remeasure():
 def test_key_isolation_across_device_kinds(monkeypatch):
     _measure()
     file_a = dispatch.autotune_cache_file()
-    real_kind = dispatch.device_kind
+    real_kind = autotune.device_kind
 
-    # Same backend, different silicon: winners must not transfer.
-    monkeypatch.setattr(dispatch, "device_kind", lambda: "TPU-v99")
+    # Same backend, different silicon: winners must not transfer.  The patch
+    # targets the autotune module — dispatch re-exports the same function.
+    monkeypatch.setattr(autotune, "device_kind", lambda: "TPU-v99")
     dispatch.clear_autotune_cache()
     file_b = dispatch.autotune_cache_file()
     assert file_b != file_a, "cache file must be keyed on device kind"
@@ -73,7 +75,7 @@ def test_key_isolation_across_device_kinds(monkeypatch):
     assert os.path.exists(file_a) and os.path.exists(file_b)
 
     # And back: the original kind still loads its own winners untouched.
-    monkeypatch.setattr(dispatch, "device_kind", real_kind)
+    monkeypatch.setattr(autotune, "device_kind", real_kind)
     dispatch.clear_autotune_cache()
     _, calls_back = _measure()
     assert calls_back == []
@@ -84,9 +86,10 @@ def test_key_isolation_across_device_kinds(monkeypatch):
     [
         b"{ not json at all",
         json.dumps({"version": 999, "entries": []}).encode(),
-        json.dumps({"version": 1, "backend": "cpu", "device_kind": "other",
-                    "entries": []}).encode(),
-        json.dumps({"version": 1, "entries": [{"op": 1}]}).encode(),
+        json.dumps({"version": autotune._PERSIST_VERSION, "backend": "cpu",
+                    "device_kind": "other", "entries": []}).encode(),
+        json.dumps({"version": autotune._PERSIST_VERSION, "backend": "cpu",
+                    "device_kind": "cpu", "entries": [{"op": 1}]}).encode(),
     ],
     ids=["syntax", "version", "foreign-kind", "schema"],
 )
@@ -107,6 +110,28 @@ def test_corrupted_cache_file_falls_back_to_measurement(garbage):
     assert calls2 == []
 
 
+def test_version_bump_invalidates_old_winners():
+    """A file from the previous cache format (version N-1) is stale by
+    definition — v1 winners predate the calibration fixes — and must be
+    re-measured wholesale, then healed to the current version."""
+    path = dispatch.autotune_cache_file()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({
+            "version": autotune._PERSIST_VERSION - 1,
+            "backend": dispatch.backend(),
+            "device_kind": dispatch.device_kind(),
+            "entries": [{"op": "persist_op", "shapes": [1000, 64],
+                         "dtype": "float32", "bn": 8, "bk": 9999}],
+        }, f)
+    cfg, calls = _measure()
+    assert len(calls) == 2, "stale-version winners must not be trusted"
+    assert cfg.bk != 9999
+    payload = json.load(open(path))
+    assert payload["version"] == autotune._PERSIST_VERSION
+    assert all(e["bk"] != 9999 for e in payload["entries"])
+
+
 def test_save_never_launders_foreign_entries():
     """A foreign-device file at our path must be overwritten, not merged:
     re-stamping its entries under a valid header would hand the next process
@@ -125,6 +150,46 @@ def test_save_never_launders_foreign_entries():
     ops = {e["op"] for e in payload["entries"]}
     assert "foreign_op" not in ops, "foreign entries must not be re-stamped"
     assert payload["device_kind"] == dispatch.device_kind()
+
+
+def test_concurrent_writer_entries_merge_on_save():
+    """Two processes measuring DIFFERENT buckets must not clobber each other:
+    the save path merges disk entries it has not seen back into the payload.
+
+    Simulated: process A measures op_a and saves; process B (cleared cache)
+    is pinned as already-hydrated — as if it loaded before A's save landed —
+    measures op_b, and saves.  Both winners must survive on disk.
+    """
+    _measure(op="op_a")
+    path = dispatch.autotune_cache_file()
+    assert {e["op"] for e in json.load(open(path))["entries"]} == {"op_a"}
+
+    dispatch.clear_autotune_cache()
+    # Pin the loaded-from marker so B skips hydration (stale view of disk).
+    autotune._PERSIST_LOADED_FROM = path
+    _, calls = _measure(op="op_b")
+    assert len(calls) == 2, "B must measure op_b itself (no hydration)"
+    ops = {e["op"] for e in json.load(open(path))["entries"]}
+    assert ops == {"op_a", "op_b"}, "A's concurrent winner must be merged back"
+
+
+def test_atomic_save_failure_never_fails_the_op(monkeypatch):
+    """Persistence is best-effort: a failing tmp-file creation (read-only
+    cache dir, full disk) is counted, not raised, and the measured winner
+    still serves the calling op from memory."""
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(tempfile, "mkstemp", boom)
+    cfg, calls = _measure()
+    assert len(calls) == 2 and cfg is not None
+    info = dispatch.autotune_cache_info()
+    assert info["disk_errors"] >= 1
+    path = dispatch.autotune_cache_file()
+    assert not os.path.exists(path), "failed save must leave no partial file"
+    # In-memory winner still serves this process.
+    _, calls2 = _measure()
+    assert calls2 == []
 
 
 def test_persistence_disabled_by_env(monkeypatch, tmp_path):

@@ -1,0 +1,111 @@
+"""The benchmark regression gate (tools/check_bench.py) as a unit.
+
+Drives ``main()`` against synthetic BENCH files and baselines in a tmp repo
+layout — no real benchmarks run — pinning the gate semantics: pass within
+tolerance, fail past it, fail on missing/extra rows, and ``--update-baseline``
+round-trips.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "tools", "check_bench.py"),
+)
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+@pytest.fixture()
+def fake_repo(tmp_path, monkeypatch):
+    """Point the gate's module-level paths at a scratch repo layout."""
+    (tmp_path / "tools").mkdir()
+    monkeypatch.setattr(check_bench, "REPO", str(tmp_path))
+    monkeypatch.setattr(
+        check_bench, "BASELINE", str(tmp_path / "tools" / "bench_baseline.json")
+    )
+    monkeypatch.setattr(
+        check_bench, "TRACKED",
+        {"BENCH_kernels.json": ("row_a", "row_b"), "BENCH_serve.json": ("row_s",)},
+    )
+    monkeypatch.delenv("REPRO_BENCH_TOL", raising=False)
+
+    def write(kernels, serve):
+        for fname, rows in (
+            ("BENCH_kernels.json", kernels), ("BENCH_serve.json", serve),
+        ):
+            with open(tmp_path / fname, "w") as f:
+                json.dump(
+                    [{"name": n, "us_per_call": us, "derived": ""}
+                     for n, us in rows.items()],
+                    f,
+                )
+    return tmp_path, write
+
+
+def test_update_baseline_then_pass_within_tolerance(fake_repo, capsys):
+    tmp, write = fake_repo
+    write({"row_a": 100.0, "row_b": 50.0}, {"row_s": 10.0})
+    assert check_bench.main(["--update-baseline"]) == 0
+    base = json.load(open(tmp / "tools" / "bench_baseline.json"))
+    assert base == {"row_a": 100.0, "row_b": 50.0, "row_s": 10.0}
+    # 20% slower is inside the default 25% tolerance.
+    write({"row_a": 120.0, "row_b": 50.0}, {"row_s": 10.0})
+    assert check_bench.main([]) == 0
+    # Faster is always fine.
+    write({"row_a": 10.0, "row_b": 10.0}, {"row_s": 1.0})
+    assert check_bench.main([]) == 0
+
+
+def test_regression_past_tolerance_fails(fake_repo, capsys):
+    tmp, write = fake_repo
+    write({"row_a": 100.0, "row_b": 50.0}, {"row_s": 10.0})
+    check_bench.main(["--update-baseline"])
+    write({"row_a": 126.0, "row_b": 50.0}, {"row_s": 10.0})  # 26% > 25%
+    assert check_bench.main([]) == 1
+    err = capsys.readouterr().err
+    assert "row_a" in err and "FAIL" in err
+    # A looser explicit tolerance lets the same numbers through.
+    assert check_bench.main(["--tolerance", "0.5"]) == 0
+    # The env knob mirrors the flag (CI boxes set it globally).
+    os.environ["REPRO_BENCH_TOL"] = "0.5"
+    try:
+        assert check_bench.main([]) == 0
+    finally:
+        del os.environ["REPRO_BENCH_TOL"]
+
+
+def test_missing_tracked_row_and_missing_files_fail(fake_repo, capsys):
+    tmp, write = fake_repo
+    write({"row_a": 100.0, "row_b": 50.0}, {"row_s": 10.0})
+    check_bench.main(["--update-baseline"])
+    # A tracked row vanishing from the fresh output is an error, not a skip.
+    write({"row_a": 100.0}, {"row_s": 10.0})
+    assert check_bench.main([]) == 1
+    assert "row_b" in capsys.readouterr().err
+    # Missing BENCH file entirely.
+    os.remove(tmp / "BENCH_serve.json")
+    assert check_bench.main([]) == 1
+    # No baseline committed yet.
+    write({"row_a": 1.0, "row_b": 1.0}, {"row_s": 1.0})
+    os.remove(tmp / "tools" / "bench_baseline.json")
+    assert check_bench.main([]) == 1
+    assert "--update-baseline" in capsys.readouterr().err
+
+
+def test_baseline_drift_requires_regeneration(fake_repo, capsys):
+    """Rows in the baseline that are no longer tracked/emitted must fail —
+    a silently shrinking gate is how regressions sneak back in."""
+    tmp, write = fake_repo
+    write({"row_a": 100.0, "row_b": 50.0}, {"row_s": 10.0})
+    check_bench.main(["--update-baseline"])
+    base_path = tmp / "tools" / "bench_baseline.json"
+    base = json.load(open(base_path))
+    base["row_gone"] = 5.0
+    json.dump(base, open(base_path, "w"))
+    assert check_bench.main([]) == 1
+    assert "row_gone" in capsys.readouterr().err

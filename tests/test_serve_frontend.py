@@ -284,3 +284,52 @@ def test_unknown_tenant_and_bad_shapes_fail_fast():
         fe.submit("a", np.zeros((0, D), np.float32))
     with pytest.raises(ValueError):
         fe.add_tenant("a", make_session())  # duplicate registration
+
+
+# ---------------------------------------------------------------- warm-start
+
+
+def test_warmup_recompiles_observed_buckets_and_reports():
+    fe, clk = make_frontend(make_session())
+    rng = np.random.default_rng(21)
+    # Serve once so the tenant's (bucket, d) set is observed.
+    fe.submit("a", rng.normal(size=(2, D)))
+    clk.advance(WINDOW)
+    assert fe.flush() == 1
+    state = fe.tenant("a")
+    assert state.observed_buckets, "dispatch must record the bucket it served"
+    report = fe.warmup("a")
+    assert report.errors == 0
+    assert report.warmed == len({b for (b, bd) in state.observed_buckets if bd == D})
+    assert state.warmups == 1 and fe.stats["warmups"] == 1
+    # Warming a tenant that never served traffic still warms the minimum
+    # bucket (first-query traffic should not pay compile either way).
+    fe.add_tenant("fresh", make_session(seed=3))
+    report = fe.warmup("fresh")
+    assert report.warmed >= 1 and report.errors == 0
+
+
+def test_generation_bump_auto_warms_and_env_opts_out(monkeypatch):
+    monkeypatch.delenv("REPRO_WARM_START", raising=False)
+    fe, clk = make_frontend(make_session())
+    rng = np.random.default_rng(22)
+    fe.submit("a", rng.normal(size=(2, D)))
+    clk.advance(WINDOW)
+    fe.flush()
+    sess = fe.tenant("a").session
+    before = fe.warmups
+    # A model generation bump fires the solve listener → auto warm-up of the
+    # observed buckets against the NEW centers.
+    sess.ingest(rng.normal(size=(80, D)).astype(np.float32))
+    sess.solve()
+    assert fe.warmups == before + 1
+    # Post-warmup queries still answer correctly against the new model.
+    t = fe.submit("a", rng.normal(size=(2, D)))
+    clk.advance(WINDOW)
+    fe.flush()
+    assert t.done and t.state == "done"
+    # Opting out suppresses the auto warm-up (listener stays registered).
+    monkeypatch.setenv("REPRO_WARM_START", "0")
+    sess.ingest(rng.normal(size=(80, D)).astype(np.float32))
+    sess.solve()
+    assert fe.warmups == before + 1

@@ -227,6 +227,44 @@ def test_session_query_staleness_and_autosolve():
     assert sess.staleness["points"] == 0 and sess.staleness["version"] == 2
 
 
+def test_query_engine_warmup_recompiles_observed_buckets():
+    from repro.stream.query import QueryEngine
+
+    rng = np.random.default_rng(4)
+    centers = rng.normal(size=(K, D)).astype(np.float32)
+    engine = QueryEngine()
+    engine.assign(rng.normal(size=(37, D)).astype(np.float32), centers)
+    engine.assign(rng.normal(size=(65, D)).astype(np.float32), centers)
+    report = engine.warmup(centers)
+    assert report.errors == 0
+    assert report.warmed == 2, "both observed buckets must re-warm"
+    assert engine.warmups == 1
+    # A fresh engine (no observed traffic) still warms the minimum bucket.
+    fresh = QueryEngine()
+    report = fresh.warmup(centers)
+    assert report.warmed == 1 and report.errors == 0
+
+
+def test_solve_warm_starts_query_engine_and_fires_listeners(monkeypatch):
+    monkeypatch.delenv("REPRO_WARM_START", raising=False)
+    sess = StreamingSession(
+        D, K, num_nodes=S, fanout=FANOUT, leaf_size=LEAF, coreset_size=M, seed=0
+    )
+    seen = []
+    sess.add_solve_listener(lambda s: seen.append(s.version))
+    sess.ingest(_batches(1, batch=2 * LEAF)[0])
+    sess.solve()
+    assert seen == [1], "solve listeners must fire after the version bump"
+    assert sess.stats["query_warmups"] == 1
+    # Opt-out: no query warm-up, but listeners still fire (tiers gate
+    # themselves — the hook is not the policy).
+    monkeypatch.setenv("REPRO_WARM_START", "0")
+    sess.ingest(_batches(1, batch=30, seed=2)[0])
+    sess.solve()
+    assert seen == [1, 2]
+    assert sess.stats["query_warmups"] == 1
+
+
 # -------------------------------------------------- session end-to-end
 
 

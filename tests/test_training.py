@@ -201,6 +201,35 @@ def test_interrupt_resume_trajectory_equivalence(cfg):
         _tree_allclose(final1.params, final2.params, rtol=1e-5, atol=1e-6)
 
 
+def test_trainer_warm_start_is_invisible_to_the_trajectory(cfg, monkeypatch):
+    """run() pre-compiles the step with one discarded all-alive step: the
+    report must record it, session/elastic stats must not see it, and the
+    resulting trajectory must be bit-identical to a warm-start-less run."""
+    monkeypatch.delenv("REPRO_WARM_START", raising=False)
+    tc = TrainerConfig(
+        num_groups=4, num_shards=4, redundancy=2, microbatch=1, seq_len=32,
+        steps=3, simulate_stragglers=False,
+    )
+    oc = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=3)
+    t_warm = Trainer(cfg, tc, oc)
+    assert t_warm.warmup_report is None
+    final_warm = t_warm.run()
+    rep = t_warm.warmup_report
+    assert rep is not None and rep.warmed == 1 and rep.errors == 0
+    assert len(t_warm.history) == 3, "the warm-up step must not enter history"
+
+    t_cold = Trainer(cfg, TrainerConfig(**{**tc.__dict__, "warm_start": False}), oc)
+    final_cold = t_cold.run()
+    assert t_cold.warmup_report is None
+    _tree_allclose(final_warm.params, final_cold.params, rtol=0, atol=0)
+
+    # The env opt-out beats the config default.
+    monkeypatch.setenv("REPRO_WARM_START", "0")
+    t_off = Trainer(cfg, tc, oc)
+    t_off.run()
+    assert t_off.warmup_report is None
+
+
 # ----------------------------------------------------------- compression
 
 

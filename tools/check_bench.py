@@ -1,0 +1,131 @@
+"""Benchmark regression gate: fresh BENCH_*.json vs the committed baseline.
+
+Reads freshly-emitted ``BENCH_kernels.json`` / ``BENCH_serve.json`` (written
+by ``make bench-kernels`` / ``make bench-serve``) and compares every TRACKED
+row against ``tools/bench_baseline.json``.  A tracked row more than
+``--tolerance`` (default 25%) slower than its committed baseline fails the
+gate — so a perf regression in the dispatch/autotune/serving hot paths breaks
+``make test-all`` instead of silently shipping.
+
+Rows are wall-clock, so the tolerance is deliberately loose; the gate exists
+to catch the "auto pick flipped to a 3× slower rung" class of regression, not
+±10% scheduler noise.  Untracked rows are informational only.  A fresh row
+missing from the baseline (or vice versa) is an error: baselines must be
+regenerated alongside the benchmarks that feed them.
+
+    python tools/check_bench.py                       # gate against baseline
+    python tools/check_bench.py --update-baseline     # accept current numbers
+    python tools/check_bench.py --tolerance 0.5       # loosen (CI shared boxes)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "tools", "bench_baseline.json")
+
+# (file, row) pairs the gate enforces — the dispatch/autotune/serving rows
+# this PR's acceptance criteria are written against.
+TRACKED = {
+    "BENCH_kernels.json": (
+        "pairwise_auto",
+        "assign_min_auto",
+        "assign_min_chunked",
+        "assign_min_large_auto",
+        "segsum_auto",
+        "segsum_segment",
+        "attention_auto",
+    ),
+    "BENCH_serve.json": (
+        "serve_p50",
+        "serve_p99",
+        "serve_first_query_warmed",
+    ),
+}
+
+
+def _load_rows(path: str) -> dict[str, float]:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return {row["name"]: float(row["us_per_call"]) for row in data}
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--tolerance", type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOL", "0.25")),
+        help="allowed relative slowdown vs baseline (default 0.25 = 25%%)",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite tools/bench_baseline.json from the fresh BENCH files",
+    )
+    args = ap.parse_args(argv)
+
+    fresh: dict[str, float] = {}
+    missing_files = []
+    for fname, rows in TRACKED.items():
+        path = os.path.join(REPO, fname)
+        if not os.path.exists(path):
+            missing_files.append(fname)
+            continue
+        all_rows = _load_rows(path)
+        for name in rows:
+            if name not in all_rows:
+                print(f"check-bench: {fname} is missing tracked row "
+                      f"'{name}' — regenerate it", file=sys.stderr)
+                return 1
+            fresh[name] = all_rows[name]
+    if missing_files:
+        for fname in missing_files:
+            print(f"check-bench: {fname} not found — run the matching "
+                  f"bench target first", file=sys.stderr)
+        return 1
+
+    if args.update_baseline:
+        with open(BASELINE, "w", encoding="utf-8") as f:
+            json.dump(fresh, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check-bench: wrote {len(fresh)} baseline rows to "
+              f"{os.path.relpath(BASELINE, REPO)}")
+        return 0
+
+    if not os.path.exists(BASELINE):
+        print("check-bench: no baseline committed — run with "
+              "--update-baseline first", file=sys.stderr)
+        return 1
+    with open(BASELINE, encoding="utf-8") as f:
+        base = {k: float(v) for k, v in json.load(f).items()}
+
+    failures = []
+    for name in sorted(fresh):
+        if name not in base:
+            failures.append(f"{name}: in fresh BENCH output but not in the "
+                            "baseline — rerun --update-baseline")
+            continue
+        ratio = fresh[name] / base[name] if base[name] > 0 else float("inf")
+        tag = "FAIL" if ratio > 1.0 + args.tolerance else "ok"
+        print(f"check-bench: {tag:4s} {name}: {fresh[name]:.1f}us vs "
+              f"baseline {base[name]:.1f}us ({ratio:.2f}x)")
+        if tag == "FAIL":
+            failures.append(
+                f"{name}: {fresh[name]:.1f}us is {ratio:.2f}x the baseline "
+                f"{base[name]:.1f}us (tolerance {1.0 + args.tolerance:.2f}x)"
+            )
+    for name in sorted(set(base) - set(fresh)):
+        failures.append(f"{name}: in the baseline but not tracked/emitted "
+                        "anymore — rerun --update-baseline")
+
+    for f_ in failures:
+        print(f"check-bench: FAIL {f_}", file=sys.stderr)
+    print(f"check-bench: {len(fresh)} rows, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
