@@ -5,16 +5,22 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-all test-cov lint docs-check check-bench bench-kernels bench-scenarios bench-serve bench-stream bench-train bench
+.PHONY: test test-all test-cov lint docs-check check-bench check-obs obs-report bench-kernels bench-scenarios bench-serve bench-stream bench-train bench
 
 test:  ## tier-1: fast suite, fails after 300 s
 	timeout 300 $(PY) -m pytest -x -q
 
-test-all: lint docs-check bench-kernels bench-scenarios bench-serve bench-stream bench-train check-bench test-cov  ## everything, including compile-heavy slow-marked smoke tests
+test-all: lint docs-check bench-kernels bench-scenarios bench-serve bench-stream bench-train check-bench check-obs test-cov  ## everything, including compile-heavy slow-marked smoke tests
 	timeout 900 $(PY) -m pytest -q -m ""
 
 check-bench:  ## perf regression gate: fresh BENCH_kernels/serve rows vs tools/bench_baseline.json (>25% slower fails; --update-baseline to accept)
 	$(PY) tools/check_bench.py
+
+check-obs:  ## obs-overhead gate: instrumented serve p50 vs its paired in-process REPRO_OBS=0 control (>5% slower fails; REPRO_OBS_TOL to loosen)
+	$(PY) tools/check_bench.py --obs-overhead
+
+obs-report:  ## demo straggler sweep + serve burst with tracing on → OBS_report/{OBS_metrics.prom,OBS_trace.jsonl} + stdout digest
+	timeout 300 $(PY) tools/obs_report.py --out OBS_report
 
 lint:  ## jit-safety static analysis (AST lint + jaxpr/HLO hot-path audit) → ANALYSIS.json
 	timeout 300 $(PY) tools/lint.py
@@ -33,7 +39,7 @@ bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor) → BENCH_scenarios.json
 	timeout 300 $(PY) -m benchmarks.run scenarios --emit BENCH_scenarios.json
 
-bench-serve:  ## serving-frontend burst (qps, p50/p99/p999, occupancy, cache hit rate) → BENCH_serve.json
+bench-serve:  ## serving-frontend bursts (qps, p50/p99/p999 + paired REPRO_OBS=0 control row, occupancy, cache hit rate) → BENCH_serve.json
 	timeout 300 $(PY) -m benchmarks.run serve --emit BENCH_serve.json
 
 bench-stream:  ## streaming-layer sweep (ingest rows/s, query p50/p99, compactions) → BENCH_stream.json

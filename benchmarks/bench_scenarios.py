@@ -12,7 +12,9 @@ combine out).  Derived fields per row:
   hot path never host-solves, even on previously-unseen patterns:
   ``host_solves`` stays 0 unless the exact/offline path is asked for;
 * ``patterns`` — distinct alive masks the cell observed;
-* ``patches`` / ``moved_blocks`` / ``uncovered_rounds`` — elastic activity.
+* ``patches`` / ``moved_blocks`` / ``uncovered_rounds`` — elastic activity;
+* ``round_p50_us`` / ``ewma_max`` — per-round latency (obs nearest-rank
+  percentile) and the worst per-node straggle EWMA (``session.node_health``).
 
 ``--trace PATH`` adds a recorded-trace replay column to the sweep (JSONL
 alive-mask traces from :func:`repro.core.record_trace`).
@@ -37,6 +39,7 @@ from repro.core import (
     make_scenario,
 )
 from repro.data.synthetic import gaussian_mixture
+from repro.obs import Histogram
 
 from .common import emit
 
@@ -97,8 +100,10 @@ def run(
                 )
                 patterns: set[bytes] = set()
                 cost = -1.0
+                round_hist = Histogram()  # per-round latency, obs percentiles
                 t0 = time.perf_counter()
                 for _ in range(rounds):
+                    r0 = time.perf_counter()
                     step = next(scen)
                     ev = sess.observe(step)
                     if ev["patched"] and hasattr(scen, "rebind"):
@@ -106,15 +111,19 @@ def run(
                     patterns.add(np.asarray(step.alive, bool).tobytes())
                     if step.alive.any():
                         cost = sess.step_cost(pts, centers, step.alive, median=True)
+                    round_hist.observe((time.perf_counter() - r0) * 1e6)
                 us = (time.perf_counter() - t0) / rounds * 1e6
                 st = sess.stats
+                ewma = sess.node_health()
                 emit(
                     f"scen_{scheme}_{scen_name}_{ex}",
                     us,
                     f"cost={cost:.1f} host_solves={st.host_solves} "
                     f"device_solves={st.device_solves} patterns={len(patterns)} "
                     f"patches={st.elastic_patches} moved_blocks={st.moved_node_blocks} "
-                    f"uncovered_rounds={st.uncovered_rounds}",
+                    f"uncovered_rounds={st.uncovered_rounds} "
+                    f"round_p50_us={round_hist.snapshot().percentile(0.50):.0f} "
+                    f"ewma_max={float(ewma.max()):.2f}",
                 )
 
 

@@ -11,7 +11,16 @@ is written against:
 * ``serve_occupancy``      — mean dispatched-rows / padded-bucket-rows;
 * ``serve_cache_hit_rate`` — assignment-cache hits / lookups.
 
+Obs overhead is measured *in this same process*: the burst runs
+``REPRO_BENCH_SERVE_REPEATS`` times (default 3) per span mode, interleaving
+``REPRO_OBS=1`` and ``REPRO_OBS=0`` bursts, and each mode reports its best
+burst by p50 (``serve_p50`` vs ``serve_p50_obsoff``).  Paired min-of-R is
+what the 5%-tolerance obs-overhead gate (``make check-obs``) needs on a
+shared box — separate processes swing ±20% with scheduler/compile luck,
+which would drown the signal.
+
 Knobs: ``REPRO_BENCH_SERVE_QUERIES`` (default 512 queries/burst),
+``REPRO_BENCH_SERVE_REPEATS`` (default 3 bursts per mode, best reported),
 ``REPRO_SERVE_WINDOW_MS`` / ``REPRO_SERVE_MAX_BATCH`` as in production.
 """
 
@@ -23,6 +32,7 @@ import time
 
 import numpy as np
 
+from repro.obs import Histogram
 from repro.serve import AsyncFrontend
 from repro.stream import StreamingSession
 
@@ -84,14 +94,40 @@ def run() -> None:
     pool = [rng.normal(size=(int(m), D)).astype(np.float32) for m in rng.integers(1, 9, 32)]
     asyncio.run(_burst(af, pool * 2, tenants))
 
-    qs = _queries(n_queries, rng, pool)
-    rows = sum(q.shape[0] for q in qs)
-    t0 = time.perf_counter()
-    lat = np.asarray(sorted(asyncio.run(_burst(af, qs, tenants))))
-    wall = time.perf_counter() - t0
+    # Per-query latency percentiles through the obs histogram snapshot — the
+    # same nearest-rank definition this file used to hand-roll (exact while
+    # the sample ring has dropped nothing, which a burst this size never does).
+    # Each burst draws fresh queries so the cache sees the same steady-state
+    # mix every time; span modes interleave so both see the same machine.
+    repeats = max(1, int(os.environ.get("REPRO_BENCH_SERVE_REPEATS", "3")))
 
-    def pct(p: float) -> float:
-        return float(lat[min(len(lat) - 1, int(p * len(lat)))]) * 1e6
+    def one_burst():
+        qs = _queries(n_queries, rng, pool)
+        burst_rows = sum(q.shape[0] for q in qs)
+        t0 = time.perf_counter()
+        lat = asyncio.run(_burst(af, qs, tenants))
+        burst_wall = time.perf_counter() - t0
+        h = Histogram()
+        h.observe_many([t * 1e6 for t in lat])
+        return h.snapshot(), burst_wall, burst_rows
+
+    best = {"1": None, "0": None}
+    prev_obs = os.environ.get("REPRO_OBS")
+    try:
+        for _ in range(repeats):
+            for mode in best:
+                os.environ["REPRO_OBS"] = mode
+                res = one_burst()
+                if (best[mode] is None
+                        or res[0].percentile(0.50) < best[mode][0].percentile(0.50)):
+                    best[mode] = res
+    finally:
+        if prev_obs is None:
+            os.environ.pop("REPRO_OBS", None)
+        else:
+            os.environ["REPRO_OBS"] = prev_obs
+    snap, wall, rows = best["1"]
+    pct = snap.percentile
 
     stats = af.core.stats
     emit(
@@ -99,9 +135,15 @@ def run() -> None:
         f"qps={rows / wall:.0f} queries={n_queries} rows={rows} "
         f"dispatches={stats['dispatches']} window_ms=2.0",
     )
-    emit("serve_p50", pct(0.50), "per-query latency, µs")
-    emit("serve_p99", pct(0.99), "per-query latency, µs")
-    emit("serve_p999", pct(0.999), "per-query latency, µs")
+    emit("serve_p50", pct(0.50), "per-query latency, µs (REPRO_OBS=1 burst)")
+    emit("serve_p99", pct(0.99), "per-query latency, µs (REPRO_OBS=1 burst)")
+    emit("serve_p999", pct(0.999), "per-query latency, µs (REPRO_OBS=1 burst)")
+    off_p50 = best["0"][0].percentile(0.50)
+    emit(
+        "serve_p50_obsoff", off_p50,
+        f"REPRO_OBS=0 control, same process; on/off={pct(0.50) / off_p50:.3f}x "
+        f"(check-obs gates this ratio)",
+    )
     emit(
         "serve_occupancy", stats["occupancy"] * 100,
         f"pct of padded bucket rows filled; batches={stats['dispatches']} "

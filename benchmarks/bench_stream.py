@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import make_scenario, record_trace
 from repro.kernels import dispatch
+from repro.obs import Histogram
 from repro.stream import StreamingSession
 
 from .common import emit
@@ -104,19 +105,23 @@ def run(
                     sess.ingest(b)
                 dt = time.perf_counter() - t0
                 sess.solve(iters=5)
-                lats = []
+                # Query latencies through the obs histogram snapshot: the
+                # repo-wide nearest-rank percentile (bench_serve and this
+                # file used to disagree — np.percentile interpolates).
+                lat_hist = Histogram()
                 for _ in range(query_calls):
                     q0 = time.perf_counter()
                     sess.query(queries)
-                    lats.append((time.perf_counter() - q0) * 1e6)
+                    lat_hist.observe((time.perf_counter() - q0) * 1e6)
+                snap = lat_hist.snapshot()
                 st = sess.stats
                 emit(
                     f"stream_{scen_name}_{ex}",
                     dt / n_batches * 1e6,
                     f"rows_s={n_batches * batch / dt:.0f} "
                     f"compactions_per_ingest={st['compactions'] / n_batches:.2f} "
-                    f"q_p50_us={np.percentile(lats, 50):.0f} "
-                    f"q_p99_us={np.percentile(lats, 99):.0f} "
+                    f"q_p50_us={snap.percentile(0.50):.0f} "
+                    f"q_p99_us={snap.percentile(0.99):.0f} "
                     f"buckets={st['buckets']} levels={st['levels']} "
                     f"host_solves={st['recovery_host_solves']} "
                     f"blocking={st['blocking_compactions']} "

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from ..analysis import compiled_path
+from ..obs import trace_span
 from .aggregation import resilient_sum
 from .recovery import jax_recovery_masked
 
@@ -166,8 +167,11 @@ class LocalExecutor(Executor):
         )
 
     def resilient_reduce(self, fn, node_args, broadcast_args, b_full):
-        per_node = self.map_nodes(fn, node_args, broadcast_args)
-        return resilient_sum(per_node, jnp.asarray(b_full, jnp.float32))
+        # Host-side span around the compiled combine INVOCATION (dispatch,
+        # not device execution — jax returns before the result is ready).
+        with trace_span("executor.combine", executor=self.name):
+            per_node = self.map_nodes(fn, node_args, broadcast_args)
+            return resilient_sum(per_node, jnp.asarray(b_full, jnp.float32))
 
     @compiled_path("local.masked_reduce", kind="factory")
     def _masked_step_raw(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
@@ -208,16 +212,21 @@ class LocalExecutor(Executor):
             if b_override is None
             else jnp.asarray(b_override, jnp.float32)
         )
-        return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
-            A, jnp.asarray(alive, bool), use_ov, b_ov,
-            *node_args, *broadcast_args,
-        )
+        with trace_span(
+            "executor.masked_reduce", executor=self.name,
+            nodes=int(A.shape[0]), override=b_override is not None,
+        ):
+            return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
+                A, jnp.asarray(alive, bool), use_ov, b_ov,
+                *node_args, *broadcast_args,
+            )
 
     def replicated_compute(self, fn, args):
         key = ("replicated", fn)
         if key not in self._jitted:
             self._jitted[key] = jax.jit(fn)
-        return self._jitted[key](*(_as_jax_tree(a) for a in args))
+        with trace_span("executor.replicated", executor=self.name):
+            return self._jitted[key](*(_as_jax_tree(a) for a in args))
 
     def update_node_rows(self, arr, rows, new_rows):
         idx = jnp.asarray(list(rows), jnp.int32)

@@ -33,17 +33,23 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import os
 from typing import Optional, Union
 
 import numpy as np
 
 from ..analysis import compiled_path
+from ..obs import StatsView, default_registry, trace_span
 from .assignment import Assignment, cyclic_assignment
 from .executor import Executor, get_executor
 from .recovery import RecoveryResult, solve_recovery
 
 __all__ = ["ElasticPolicy", "SessionStats", "ResilienceSession"]
+
+# Distinguishes concurrent sessions' metrics in the shared registry
+# (labels={"session": "s<N>"}); obs-report aggregates across label sets.
+_SESSION_IDS = itertools.count()
 
 
 def _device_iters_default() -> int:
@@ -70,26 +76,30 @@ class ElasticPolicy:
     extra_replicas: int = 1
 
 
-@dataclasses.dataclass
-class SessionStats:
-    """Re-solve / cache / elastic counters (emitted by bench_scenarios)."""
+class SessionStats(StatsView):
+    """Re-solve / cache / elastic counters (emitted by bench_scenarios).
 
-    host_solves: int = 0       # host LP/NNLS solves (offline/exact path)
-    device_solves: int = 0     # on-device solves (fused compiled-step path)
-    cache_hits: int = 0        # pattern-cache hits across ALL consumers
-    coverage_checks: int = 0   # per-pattern coverage validations COMPUTED
-    elastic_patches: int = 0   # assignment patches applied
-    reshards: int = 0          # full survivor re-shards (permanent loss broke
-                               # coverage; the whole assignment was rebuilt)
-    moved_node_blocks: int = 0 # node rows re-placed incrementally
-    full_repacks: int = 0      # patches that forced a FULL re-place (capacity
-                               # overflow) instead of moved-rows-only surgery
-    cache_invalidations: int = 0  # entries dropped by patches
-    rounds: int = 0            # observe() calls
-    uncovered_rounds: int = 0  # rounds where some shard had no alive replica
+    A thin view over the process-wide :class:`repro.obs.MetricsRegistry`
+    (metric names ``resilience_<field>{session=…}``): ``stats.host_solves``
+    and the ``obs-report`` dump read the same counter, so the two can never
+    disagree.  Attribute reads/writes keep the legacy dataclass semantics
+    (``+= 1``, integer values, ``as_dict()``).
+    """
 
-    def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+    PREFIX = "resilience_"
+    FIELDS = {
+        "host_solves": "host LP/NNLS solves (offline/exact path)",
+        "device_solves": "on-device solves (fused compiled-step path)",
+        "cache_hits": "pattern-cache hits across ALL consumers",
+        "coverage_checks": "per-pattern coverage validations COMPUTED",
+        "elastic_patches": "assignment patches applied",
+        "reshards": "full survivor re-shards (permanent loss broke coverage)",
+        "moved_node_blocks": "node rows re-placed incrementally",
+        "full_repacks": "patches that forced a FULL re-place (capacity overflow)",
+        "cache_invalidations": "cache entries dropped by patches",
+        "rounds": "observe() calls",
+        "uncovered_rounds": "rounds where some shard had no alive replica",
+    }
 
 
 class ResilienceSession:
@@ -110,7 +120,8 @@ class ResilienceSession:
         self.executor = get_executor(executor)
         self.elastic = elastic if elastic is not None else ElasticPolicy(enabled=False)
         self.device_iters = device_iters or _device_iters_default()
-        self.stats = SessionStats()
+        self._obs_labels = {"session": f"s{next(_SESSION_IDS)}"}
+        self.stats = SessionStats(labels=self._obs_labels)
         self.version = 0  # bumped by every elastic patch
         # Object ids of every assignment this session has owned (the original
         # plus each elastic patch) — lets entry points reject a genuinely
@@ -126,6 +137,11 @@ class ResilienceSession:
         # it is keyed and invalidated like _coverage but seeded on its own.
         self._covers: dict[bytes, bool] = {}
         self._streak = np.zeros(assignment.num_nodes, dtype=np.int64)
+        # Observed-straggle EWMA per node (0 = always alive, 1 = always
+        # straggling) — the online per-node reliability estimate the
+        # cost-model-driven placement optimizer will consume (ROADMAP).
+        self.straggle_alpha = 0.2
+        self._straggle_ewma = np.zeros(assignment.num_nodes, dtype=np.float64)
         # Nodes declared PERMANENTLY lost (vs. transient stragglers, which
         # are per-round mask entries) — see permanent_loss()/permanent_join().
         self._permanent_dead: set[int] = set()
@@ -170,7 +186,11 @@ class ResilienceSession:
         if hit is not None:
             self.stats.cache_hits += 1
             return hit
-        res = solve_recovery(self.assignment, alive, method=self.recovery_method)
+        with trace_span(
+            "session.recovery_solve",
+            alive=int(alive.sum()), nodes=alive.size, **self._obs_labels,
+        ):
+            res = solve_recovery(self.assignment, alive, method=self.recovery_method)
         self.stats.host_solves += 1
         self._cache[key] = res
         return res
@@ -321,17 +341,23 @@ class ResilienceSession:
         import jax
         import jax.numpy as jnp
 
-        est, _b = self.executor.resilient_reduce_masked(
-            _local_cost_fn(median, impl),
-            (xs_p, ws_p),
-            (jnp.asarray(centers, jnp.float32),),
-            A_p,
-            alive,
-            iters=self.device_iters,
-        )
-        self.stats.device_solves += 1
-        # The scalar estimate is this call's one sanctioned device→host sync.
-        return float(jax.device_get(est))
+        # The span wraps the compiled-step INVOCATION (host side of the
+        # boundary) — nothing obs-related runs inside the traced step.
+        with trace_span(
+            "session.step_cost",
+            alive=int(alive.sum()), nodes=alive.size, **self._obs_labels,
+        ):
+            est, _b = self.executor.resilient_reduce_masked(
+                _local_cost_fn(median, impl),
+                (xs_p, ws_p),
+                (jnp.asarray(centers, jnp.float32),),
+                A_p,
+                alive,
+                iters=self.device_iters,
+            )
+            self.stats.device_solves += 1
+            # The scalar estimate is this call's one sanctioned device→host sync.
+            return float(jax.device_get(est))
 
     def device_recovery_weights(self, alive) -> np.ndarray:
         """(s,) b_full from the on-device solver (no host LP).  Standalone
@@ -389,6 +415,15 @@ class ResilienceSession:
         alive = np.asarray(getattr(step, "alive", step), dtype=bool)
         self.stats.rounds += 1
         self._streak = np.where(alive, 0, self._streak + 1)
+        a = self.straggle_alpha
+        self._straggle_ewma = (1.0 - a) * self._straggle_ewma + a * (~alive)
+        reg = default_registry()
+        for i, v in enumerate(self._straggle_ewma):
+            reg.gauge(
+                "node_straggle_ewma",
+                labels={**self._obs_labels, "node": str(i)},
+                help="per-node observed-straggle EWMA (0=alive, 1=straggling)",
+            ).set(float(v))
         A = self.assignment.matrix
         uncovered = int((A[alive].sum(axis=0) == 0).sum()) if alive.any() else self.num_shards
         if uncovered:
@@ -420,6 +455,16 @@ class ResilienceSession:
                 event.update(patched=True, at_risk=at_risk.tolist(), moved_nodes=moved)
         return event
 
+    @compiled_path("session.node_health", kind="host")
+    def node_health(self) -> np.ndarray:
+        """(n,) observed-straggle EWMA per node: 0.0 = always alive, 1.0 =
+        always straggling, learned online from :meth:`observe` rounds with
+        smoothing ``straggle_alpha``.  The input signal for the
+        cost-model-driven placement optimizer (ROADMAP): replicate onto
+        nodes with LOW values.  Also exported as the
+        ``node_straggle_ewma{session=…,node=…}`` gauges in obs-report."""
+        return self._straggle_ewma.copy()
+
     # ----------------------------------------------------- elastic patching
 
     def _patch(self, shards: np.ndarray, healthy: np.ndarray, alive: np.ndarray) -> list[int]:
@@ -441,21 +486,25 @@ class ResilienceSession:
                         break
         if not moved:
             return []
-        old_m = int(self.assignment.matrix.sum(axis=1).max())
-        scheme = self.assignment.scheme
-        if not scheme.endswith("+elastic"):
-            scheme = scheme + "+elastic"
-        self.assignment = dataclasses.replace(
-            self.assignment, matrix=mat, scheme=scheme
-        )
-        self._assignment_lineage.add(id(self.assignment))
-        self._invalidate_patterns(sorted(moved))
-        self.stats.elastic_patches += 1
-        self.version += 1
-        self._replace_moved_blocks(sorted(moved), old_m)
-        new_m = int(self.assignment.matrix.sum(axis=1).max())
-        for cb in self._patch_listeners:
-            cb(sorted(moved), old_m, new_m)
+        with trace_span(
+            "session.elastic_patch",
+            shards=int(shards.size), moved=len(moved), **self._obs_labels,
+        ):
+            old_m = int(self.assignment.matrix.sum(axis=1).max())
+            scheme = self.assignment.scheme
+            if not scheme.endswith("+elastic"):
+                scheme = scheme + "+elastic"
+            self.assignment = dataclasses.replace(
+                self.assignment, matrix=mat, scheme=scheme
+            )
+            self._assignment_lineage.add(id(self.assignment))
+            self._invalidate_patterns(sorted(moved))
+            self.stats.elastic_patches += 1
+            self.version += 1
+            self._replace_moved_blocks(sorted(moved), old_m)
+            new_m = int(self.assignment.matrix.sum(axis=1).max())
+            for cb in self._patch_listeners:
+                cb(sorted(moved), old_m, new_m)
         return sorted(moved)
 
     def add_patch_listener(self, cb) -> None:
@@ -509,7 +558,10 @@ class ResilienceSession:
         alive = self.alive_mask()
         res = self.recovery(alive)
         if len(res.uncovered) > 0:
-            self._reshard_survivors(alive)
+            with trace_span(
+                "session.reshard", node=int(node), **self._obs_labels
+            ):
+                self._reshard_survivors(alive)
             res = self.recovery(self.alive_mask())
         return res
 

@@ -184,10 +184,40 @@ _AUTOTUNE_CACHE: Dict[tuple, BlockConfig] = {}
 # Measured *strategy* winners (ladder rung per shape bucket) — same keying as
 # the block-config cache, but the cached value is a canonical impl name.
 _STRATEGY_CACHE: Dict[tuple, str] = {}
-_AUTOTUNE_STATS = {
-    "hits": 0, "misses": 0, "measured": 0, "errors": 0,
-    "budget_stops": 0, "deferred": 0, "disk_loaded": 0, "disk_errors": 0,
-}
+class _RegistryStats:
+    """Dict-like view over the ``autotune_*`` counters in the process-wide
+    metrics registry — same ``stats["hits"] += 1`` call sites as the old
+    plain dict, but the numbers surface in obs-report too."""
+
+    FIELDS = (
+        "hits", "misses", "measured", "errors",
+        "budget_stops", "deferred", "disk_loaded", "disk_errors",
+    )
+
+    def __init__(self):
+        from ..obs import default_registry
+
+        self._c = {
+            f: default_registry().counter(
+                "autotune_" + f, help=f"autotune {f.replace('_', ' ')}"
+            )
+            for f in self.FIELDS
+        }
+
+    def __getitem__(self, k: str) -> int:
+        return int(self._c[k].value)
+
+    def __setitem__(self, k: str, v) -> None:
+        self._c[k].set(v)
+
+    def __iter__(self):
+        return iter(self._c)
+
+    def keys(self):
+        return self._c.keys()
+
+
+_AUTOTUNE_STATS = _RegistryStats()
 # Which persistent file the in-memory cache has been hydrated from (None =
 # not yet).  Re-checked per lookup so a monkeypatched env var / device kind
 # (tests) or a cleared cache triggers a fresh load.
@@ -409,19 +439,23 @@ def _measure_pass(ordered: Sequence, bench: Callable) -> Dict:
     if not _trace_clean():
         _AUTOTUNE_STATS["deferred"] += 1
         return times
+    from ..obs import trace_span
+
     budget = measure_budget_s()
-    t_start = time.perf_counter()
-    for cand in ordered:
-        if times and (time.perf_counter() - t_start) > budget:
-            _AUTOTUNE_STATS["budget_stops"] += 1
-            break
-        try:
-            t = _time_once(bench(cand))
-        except Exception:
-            _AUTOTUNE_STATS["errors"] += 1
-            continue
-        _AUTOTUNE_STATS["measured"] += 1
-        times[cand] = t
+    with trace_span("autotune.measure", candidates=len(ordered)) as sp:
+        t_start = time.perf_counter()
+        for cand in ordered:
+            if times and (time.perf_counter() - t_start) > budget:
+                _AUTOTUNE_STATS["budget_stops"] += 1
+                break
+            try:
+                t = _time_once(bench(cand))
+            except Exception:
+                _AUTOTUNE_STATS["errors"] += 1
+                continue
+            _AUTOTUNE_STATS["measured"] += 1
+            times[cand] = t
+        sp.set_attr(measured=len(times))
     return times
 
 
@@ -582,21 +616,25 @@ def warmup(plan: Iterable) -> WarmupReport:
     cache hot.  Exceptions are counted, not raised — a failed warm-up must
     never take down the tier it was warming.
     """
+    from ..obs import trace_span
+
     report = WarmupReport()
     measured_before = _AUTOTUNE_STATS["measured"]
     t0 = time.perf_counter()
     labels = []
-    for entry in plan:
-        label, fn = entry if isinstance(entry, tuple) else (None, entry)
-        if label is None:
-            label = getattr(fn, "__name__", "warmup")
-        try:
-            out = fn()
-            jax.block_until_ready(out)
-            report.warmed += 1
-            labels.append(str(label))
-        except Exception:
-            report.errors += 1
+    with trace_span("autotune.warmup") as sp:
+        for entry in plan:
+            label, fn = entry if isinstance(entry, tuple) else (None, entry)
+            if label is None:
+                label = getattr(fn, "__name__", "warmup")
+            try:
+                out = fn()
+                jax.block_until_ready(out)
+                report.warmed += 1
+                labels.append(str(label))
+            except Exception:
+                report.errors += 1
+        sp.set_attr(warmed=report.warmed, errors=report.errors)
     report.seconds = time.perf_counter() - t0
     report.measured = _AUTOTUNE_STATS["measured"] - measured_before
     report.labels = tuple(labels)

@@ -46,6 +46,7 @@ from ..analysis import compiled_path
 from ..core.aggregation import resilient_psum, resilient_sum
 from ..core.executor import Executor
 from ..core.recovery import jax_recovery_masked
+from ..obs import trace_span
 from .compat import make_auto_mesh, shard_map
 
 __all__ = ["MeshExecutor", "node_mesh"]
@@ -154,9 +155,12 @@ class MeshExecutor(Executor):
         node_args, _ = self._pad_nodes((b_full,) + tuple(node_args))
         node_args = tuple(self._place(a, P(NODE_AXIS)) for a in node_args)
         broadcast_args = tuple(self._place(a, P()) for a in broadcast_args)
-        return self._compiled(fn, len(node_args) - 1, len(broadcast_args), reduce_=True)(
-            *node_args, *broadcast_args
-        )
+        with trace_span(
+            "executor.combine", executor=self.name, devices=self.num_devices
+        ):
+            return self._compiled(fn, len(node_args) - 1, len(broadcast_args), reduce_=True)(
+                *node_args, *broadcast_args
+            )
 
     @compiled_path("mesh.masked_reduce", kind="factory")
     def _masked_step_raw(self, fn: Callable, n_node: int, n_bcast: int, iters: int):
@@ -222,11 +226,18 @@ class MeshExecutor(Executor):
             b_ov = jnp.pad(b_ov, (0, pad))
         node_args = tuple(self._place(a, P(NODE_AXIS)) for a in node_args)
         broadcast_args = tuple(self._place(a, P()) for a in broadcast_args)
-        return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
-            self._place(A, P()), self._place(alive, P()),
-            self._place(use_ov, P()), self._place(b_ov, P()),
-            *node_args, *broadcast_args,
-        )
+        # Span covers the host-side dispatch of the sharded step (placement
+        # already done above); device execution is asynchronous beyond it.
+        with trace_span(
+            "executor.masked_reduce", executor=self.name,
+            nodes=int(A.shape[0]), devices=self.num_devices,
+            override=b_override is not None,
+        ):
+            return self._compiled_masked(fn, len(node_args), len(broadcast_args), iters)(
+                self._place(A, P()), self._place(alive, P()),
+                self._place(use_ov, P()), self._place(b_ov, P()),
+                *node_args, *broadcast_args,
+            )
 
     def replicated_compute(self, fn, args):
         """Genuinely redundant execution: the same program on EVERY device.
@@ -250,7 +261,10 @@ class MeshExecutor(Executor):
             )
             self._jitted[key] = jax.jit(sharded)
         placed = tuple(self._place(a, P()) for a in args)
-        return self._jitted[key](*placed)
+        with trace_span(
+            "executor.replicated", executor=self.name, devices=self.num_devices
+        ):
+            return self._jitted[key](*placed)
 
     # --------------------------------------------------- placement helpers
 

@@ -46,6 +46,7 @@ import numpy as np
 
 from ..core.coreset import _reduce_fn
 from ..core.resilience import ResilienceSession
+from ..obs import trace_span
 
 __all__ = ["Bucket", "StreamBuffer"]
 
@@ -212,7 +213,8 @@ class StreamBuffer:
         preserving pattern under a δ = 0 scheme) produces the same bucket."""
         key = jax.random.fold_in(self._base_key, self._seq)
         fn = _reduce_fn(self.k, self.m, self.squared, self.bicriteria_iters, self.impl)
-        pts, wts = self.session.executor.replicated_compute(fn, (key, x, w))
+        with trace_span("stream.compaction", level=level, rows=int(x.shape[0])):
+            pts, wts = self.session.executor.replicated_compute(fn, (key, x, w))
         if level == 0:
             self.leaf_compactions += 1
         b = Bucket(

@@ -23,6 +23,7 @@ center set) that lags ingestion.  Three properties matter:
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import NamedTuple
 
 import jax
@@ -32,8 +33,11 @@ import numpy as np
 from ..analysis import compiled_path
 from ..kernels import autotune
 from ..kernels.pairwise_dist import ops as pd
+from ..obs import default_registry, trace_span
 
 __all__ = ["QueryResult", "QueryEngine", "bucket_size"]
+
+_ENGINE_IDS = itertools.count()  # label key for per-engine registry counters
 
 _MIN_BATCH = 64  # smallest compiled bucket: tiny batches share one program
 
@@ -87,8 +91,18 @@ class QueryEngine:
     def __init__(self, impl: str = "auto"):
         self.impl = impl
         self._buckets: set = set()  # (bucket, d, k) shapes this engine served
-        self.queries_served = 0
-        self.warmups = 0  # warm-up passes run (generation bumps, explicit)
+        # Counters live in the process-wide metrics registry (read back via
+        # the properties below) — the stream copy of serve-tier bookkeeping
+        # is gone, obs-report and session.stats read the same numbers.
+        labels = {"engine": f"q{next(_ENGINE_IDS)}"}
+        reg = default_registry()
+        self._c_served = reg.counter(
+            "query_served_rows", labels=labels, help="query rows answered"
+        )
+        self._c_warmups = reg.counter(
+            "query_warmups", labels=labels,
+            help="warm-up passes run (generation bumps, explicit)",
+        )
         # Device-placed centers, keyed by (id(centers), version, shape): the
         # model changes only when the session re-solves (new array + bumped
         # version), so re-uploading the center set on EVERY query is pure
@@ -101,6 +115,14 @@ class QueryEngine:
     @property
     def compiled_buckets(self) -> int:
         return len(self._buckets)
+
+    @property
+    def queries_served(self) -> int:
+        return int(self._c_served.value)
+
+    @property
+    def warmups(self) -> int:
+        return int(self._c_warmups.value)
 
     def _device_centers(self, centers, version: int):
         key = (id(centers), int(version), np.shape(centers))
@@ -132,7 +154,7 @@ class QueryEngine:
         report = autotune.warmup(plan)
         for b in buckets:
             self._buckets.add((b, d, k))
-        self.warmups += 1
+        self._c_warmups.inc()
         return report
 
     @compiled_path("query.assign", kind="host")
@@ -159,15 +181,16 @@ class QueryEngine:
             )
         c_dev = self._device_centers(centers, version)
         bucket = _bucket_size(n)
-        qp = np.zeros((bucket, d), np.float32)
-        qp[:n] = q  # zero padding rows are sliced off below
-        idx, dist = _assign_fn(self.impl)(qp, c_dev)
-        # ONE blocking device→host transfer per query batch: both result
-        # arrays come back in a single device_get (two sequential np.asarray
-        # fetches were the other half of the p99 tail).
-        idx_h, dist_h = jax.device_get((idx[:n], dist[:n]))
+        with trace_span("query.assign", rows=n, bucket=bucket):
+            qp = np.zeros((bucket, d), np.float32)
+            qp[:n] = q  # zero padding rows are sliced off below
+            idx, dist = _assign_fn(self.impl)(qp, c_dev)
+            # ONE blocking device→host transfer per query batch: both result
+            # arrays come back in a single device_get (two sequential
+            # np.asarray fetches were the other half of the p99 tail).
+            idx_h, dist_h = jax.device_get((idx[:n], dist[:n]))
         self._buckets.add((bucket, d, int(c_dev.shape[0])))
-        self.queries_served += n
+        self._c_served.inc(n)
         return QueryResult(
             indices=np.asarray(idx_h, np.int32),
             distances=np.asarray(dist_h, np.float32),

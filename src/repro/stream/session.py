@@ -40,6 +40,7 @@ import numpy as np
 from ..analysis import compiled_path
 from ..core import kmeans
 from ..kernels import autotune
+from ..obs import trace_span
 from ..core.assignment import make_assignment
 from ..core.executor import Executor
 from ..core.resilience import ElasticPolicy, ResilienceSession
@@ -169,7 +170,10 @@ class StreamingSession:
             step = np.ones(self.resilience.num_nodes, dtype=bool)
         event = self.resilience.observe(step)
         mask = np.asarray(getattr(step, "alive", step), dtype=bool)
-        report = self.buffer.add_batch(batch, mask)
+        with trace_span(
+            "stream.ingest", rows=len(batch), stragglers=int((~mask).sum())
+        ):
+            report = self.buffer.add_batch(batch, mask)
         self._ingested += len(batch)
         self._ingests += 1
         report["alive"] = mask
@@ -203,10 +207,11 @@ class StreamingSession:
         x, w = self.frontier()
         if x.shape[0] == 0:
             raise ValueError("nothing ingested yet — solve() needs data")
-        res = self._solve_frontier(
-            jax.random.PRNGKey(self.seed if seed is None else seed),
-            x, w, self.solve_iters if iters is None else int(iters),
-        )
+        with trace_span("stream.solve", frontier=int(x.shape[0])):
+            res = self._solve_frontier(
+                jax.random.PRNGKey(self.seed if seed is None else seed),
+                x, w, self.solve_iters if iters is None else int(iters),
+            )
         self._centers = np.asarray(res.centers)
         self._version += 1
         self._points_at_solve = self._ingested

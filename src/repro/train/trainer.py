@@ -36,6 +36,7 @@ import numpy as np
 
 from ..analysis import compiled_path
 from ..core.resilience import ElasticPolicy, ResilienceSession
+from ..obs import trace_span
 from ..kernels import autotune
 from ..core.stragglers import StragglerScenario, make_scenario
 from ..data.pipeline import RedundantDataPipeline
@@ -315,7 +316,9 @@ class Trainer:
             state, _ = self.init_state()
         alive = np.ones(self.tcfg.num_groups, dtype=bool)
         sess = self.plan.session
-        stats_snapshot = dataclasses.replace(sess.stats)
+        # Registry counters are shared state: snapshot/restore through the
+        # stats view, never by swapping the object.
+        stats_snapshot = sess.stats.snapshot()
 
         def one_step():
             if self.tcfg.device_recovery:
@@ -335,7 +338,7 @@ class Trainer:
         try:
             report = autotune.warmup([("train_step", one_step)])
         finally:
-            sess.stats.__dict__.update(stats_snapshot.__dict__)
+            sess.stats.restore(stats_snapshot)
         self.warmup_report = report
         return report
 
@@ -373,7 +376,11 @@ class Trainer:
                     if ev["patched"] and hasattr(self.scenario, "rebind"):
                         # Re-aim the adversary at the patched assignment.
                         self.scenario.rebind(self.plan.current_assignment)
-                state, record = self._device_recovery_step(state, step, alive_t)
+                with trace_span(
+                    "trainer.step", step=step, path="device_recovery",
+                    stragglers=int((~alive_t).sum()),
+                ):
+                    state, record = self._device_recovery_step(state, step, alive_t)
                 if record is None:
                     self.history.append({"step": step, "skipped": True})
                     continue
@@ -386,7 +393,11 @@ class Trainer:
                     "tokens": jnp.asarray(self.pipeline.batch(step)),
                     "group_weights": jnp.asarray(weights),
                 }
-                state, metrics = self._step_fn(state, batch)
+                with trace_span(
+                    "trainer.step", step=step, path="host_weights",
+                    stragglers=int((~alive_t).sum()),
+                ):
+                    state, metrics = self._step_fn(state, batch)
                 record = {
                     "step": step,
                     "loss": float(metrics["loss"]),

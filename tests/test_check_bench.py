@@ -109,3 +109,46 @@ def test_baseline_drift_requires_regeneration(fake_repo, capsys):
     json.dump(base, open(base_path, "w"))
     assert check_bench.main([]) == 1
     assert "row_gone" in capsys.readouterr().err
+
+
+def _write_obs_rows(tmp, rows: dict) -> None:
+    with open(tmp / "BENCH_serve.json", "w") as f:
+        json.dump(
+            [{"name": n, "us_per_call": us, "derived": ""}
+             for n, us in rows.items()],
+            f,
+        )
+
+
+def test_obs_overhead_gate(fake_repo, monkeypatch, capsys):
+    """--obs-overhead compares instrumented serve latency against its paired
+    in-process REPRO_OBS=0 control row: within 5% passes, past it fails, and
+    the env knob loosens the tolerance."""
+    tmp, _ = fake_repo
+    monkeypatch.delenv("REPRO_OBS_TOL", raising=False)
+    _write_obs_rows(tmp, {"serve_p50": 104.0, "serve_p50_obsoff": 100.0})
+    assert check_bench.main(["--obs-overhead"]) == 0
+    # Faster with obs on (noise) is always fine.
+    _write_obs_rows(tmp, {"serve_p50": 90.0, "serve_p50_obsoff": 100.0})
+    assert check_bench.main(["--obs-overhead"]) == 0
+    # 8% overhead breaks the default 5% gate ...
+    _write_obs_rows(tmp, {"serve_p50": 108.0, "serve_p50_obsoff": 100.0})
+    assert check_bench.main(["--obs-overhead"]) == 1
+    assert "FAIL" in capsys.readouterr().out
+    # ... and passes once REPRO_OBS_TOL loosens it.
+    monkeypatch.setenv("REPRO_OBS_TOL", "0.10")
+    assert check_bench.main(["--obs-overhead"]) == 0
+
+
+def test_obs_overhead_missing_inputs_fail(fake_repo, monkeypatch, capsys):
+    tmp, _ = fake_repo
+    monkeypatch.delenv("REPRO_OBS_TOL", raising=False)
+    # No serve bench output at all.
+    _write_obs_rows(tmp, {"serve_p50": 100.0, "serve_p50_obsoff": 100.0})
+    os.remove(tmp / "BENCH_serve.json")
+    assert check_bench.main(["--obs-overhead"]) == 1
+    assert "bench-serve" in capsys.readouterr().err
+    # Output present but the paired control row is missing.
+    _write_obs_rows(tmp, {"serve_p50": 100.0})
+    assert check_bench.main(["--obs-overhead"]) == 1
+    assert "serve_p50_obsoff" in capsys.readouterr().err

@@ -13,9 +13,18 @@ to catch the "auto pick flipped to a 3× slower rung" class of regression, not
 missing from the baseline (or vice versa) is an error: baselines must be
 regenerated alongside the benchmarks that feed them.
 
+``--obs-overhead`` runs a different gate: instrumented serve latency
+(``serve_p50``, spans on) vs the ``REPRO_OBS=0`` control
+(``serve_p50_obsoff``) — both rows from ``BENCH_serve.json``, measured as
+interleaved bursts in ONE bench process so the comparison is paired rather
+than subject to process-to-process scheduler swings.  If tracing costs more
+than ``REPRO_OBS_TOL`` (default 5%) of serve p50, the observability layer
+has leaked onto the hot path and the gate fails.
+
     python tools/check_bench.py                       # gate against baseline
     python tools/check_bench.py --update-baseline     # accept current numbers
     python tools/check_bench.py --tolerance 0.5       # loosen (CI shared boxes)
+    python tools/check_bench.py --obs-overhead        # obs-on vs obs-off serve
 """
 
 from __future__ import annotations
@@ -48,10 +57,47 @@ TRACKED = {
 }
 
 
+# (instrumented, control) row pairs in OBS_FILE the obs-overhead gate holds
+# to ``REPRO_OBS_TOL``.  p50 only: tail rows (p99/p999) are scheduler noise
+# at this burst size, and a span leak shows up at the median first anyway.
+OBS_FILE = "BENCH_serve.json"
+OBS_PAIRS = (("serve_p50", "serve_p50_obsoff"),)
+
+
 def _load_rows(path: str) -> dict[str, float]:
     with open(path, encoding="utf-8") as f:
         data = json.load(f)
     return {row["name"]: float(row["us_per_call"]) for row in data}
+
+
+def check_obs_overhead(tolerance: float) -> int:
+    """Gate: spans-on serve latency within ``tolerance`` of the paired
+    ``REPRO_OBS=0`` control row from the same bench process."""
+    path = os.path.join(REPO, OBS_FILE)
+    if not os.path.exists(path):
+        print(f"check-bench: {OBS_FILE} not found — run `make bench-serve` "
+              "first", file=sys.stderr)
+        return 1
+    rows = _load_rows(path)
+    failures = []
+    for on_name, off_name in OBS_PAIRS:
+        missing = [n for n in (on_name, off_name) if n not in rows]
+        if missing:
+            print(f"check-bench: obs-overhead row(s) {', '.join(missing)} "
+                  f"missing from {OBS_FILE} — regenerate it with "
+                  "`make bench-serve`", file=sys.stderr)
+            return 1
+        on, off = rows[on_name], rows[off_name]
+        ratio = on / off if off > 0 else float("inf")
+        tag = "FAIL" if ratio > 1.0 + tolerance else "ok"
+        print(f"check-bench: {tag:4s} obs-overhead {on_name}: {on:.1f}us "
+              f"instrumented vs {off:.1f}us REPRO_OBS=0 ({ratio:.3f}x, "
+              f"tolerance {1.0 + tolerance:.2f}x)")
+        if tag == "FAIL":
+            failures.append(on_name)
+    print(f"check-bench: obs-overhead {len(OBS_PAIRS)} rows, "
+          f"{len(failures)} failures")
+    return 1 if failures else 0
 
 
 def main(argv: list[str]) -> int:
@@ -65,7 +111,18 @@ def main(argv: list[str]) -> int:
         "--update-baseline", action="store_true",
         help="rewrite tools/bench_baseline.json from the fresh BENCH files",
     )
+    ap.add_argument(
+        "--obs-overhead", action="store_true",
+        help="gate instrumented serve latency (serve_p50) against the paired "
+        "in-process REPRO_OBS=0 control (serve_p50_obsoff), both from "
+        "BENCH_serve.json; tolerance from REPRO_OBS_TOL (default 0.05 = 5%%)",
+    )
     args = ap.parse_args(argv)
+
+    if args.obs_overhead:
+        return check_obs_overhead(
+            float(os.environ.get("REPRO_OBS_TOL", "0.05"))
+        )
 
     fresh: dict[str, float] = {}
     missing_files = []

@@ -1,0 +1,150 @@
+"""Obs report: drive a demo workload with tracing on, dump metrics + trace.
+
+Runs a small in-process workload through the instrumented tiers — a
+bench_scenarios-style straggler sweep (elastic ``ResilienceSession`` cells
+under iid + deadline scenarios) and a serving-frontend burst with a repeat
+fraction (cache food) — then writes the observability artifacts and prints
+the human digest:
+
+* ``OBS_metrics.prom``  — Prometheus-style dump of the full registry
+  (tier counters, ``node_straggle_ewma`` per-node gauges, latency
+  histograms with buckets);
+* ``OBS_trace.jsonl``   — the span ring buffer as JSONL (one span per
+  line: name, span/parent ids, monotonic start, duration, attrs);
+* stdout                — span latency table, recovery cache hit rate,
+  per-node straggle EWMAs, serve latency by tenant, buffer stats.
+
+Obs state is process-wide, so the CLI must drive the workload itself;
+everything here reuses the same sessions/frontend the benchmarks drive.
+
+    python tools/obs_report.py --out OBS_report
+    make obs-report
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+# The report exists to show spans: record them even under an inherited
+# REPRO_OBS=0 (e.g. straight after the obs-overhead bench run).
+os.environ["REPRO_OBS"] = "1"
+
+import numpy as np  # noqa: E402
+
+SCHEMES = ("cyclic", "fr")
+SCENARIOS = ("iid", "deadline")
+
+
+def _straggler_sweep(rounds: int, n: int, s: int, k: int, seed: int) -> None:
+    """Scheme × scenario resilience cells: observe masks (EWMA telemetry,
+    elastic patches, recovery cache) + the fused compiled step cost."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ElasticPolicy,
+        ResilienceSession,
+        lloyd,
+        make_assignment,
+        make_scenario,
+    )
+    from repro.data.synthetic import gaussian_mixture
+
+    pts, _, _ = gaussian_mixture(n, k, 3, rng=np.random.default_rng(seed))
+    pts = np.asarray(pts, np.float32)
+    centers = np.asarray(
+        lloyd(jax.random.PRNGKey(seed), jnp.asarray(pts), k, iters=5, median=True).centers
+    )
+    for scheme in SCHEMES:
+        for scen_name in SCENARIOS:
+            a = make_assignment(scheme, n, s, ell=2)
+            if scen_name == "iid":
+                scen = make_scenario("iid", s, p_straggler=0.2, seed=seed + 1)
+            else:
+                scen = make_scenario(
+                    "deadline", s, seed=seed + 1, p_spike=0.1,
+                    persistence=1.0, spike_scale=6.0, deadline=2.0,
+                )
+            sess = ResilienceSession(
+                a, executor="local",
+                elastic=ElasticPolicy(enabled=True, patience=2),
+            )
+            for _ in range(rounds):
+                step = next(scen)
+                sess.observe(step)
+                if step.alive.any():
+                    sess.step_cost(pts, centers, step.alive, median=True)
+
+
+def _serve_burst(queries: int, seed: int) -> None:
+    """One-tenant serving burst with repeats: admission, micro-batching,
+    compiled dispatch, cache hits — fills serve_latency_us + serve spans."""
+    from repro.serve import ServingFrontend
+    from repro.stream import StreamingSession
+
+    d, k = 8, 4
+    rng = np.random.default_rng(seed)
+    sess = StreamingSession(d=d, k=k, num_nodes=4, leaf_size=128, seed=seed)
+    for _ in range(2):
+        sess.ingest(rng.normal(size=(512, d)).astype(np.float32))
+    sess.solve()
+    fe = ServingFrontend(window=0.0, max_batch=64)
+    fe.add_tenant("demo", sess)
+    fe.warmup("demo")
+    pool = [
+        rng.normal(size=(int(m), d)).astype(np.float32)
+        for m in rng.integers(1, 9, 16)
+    ]
+    for i in range(queries):
+        if rng.random() < 0.3:
+            q = pool[int(rng.integers(len(pool)))]
+        else:
+            q = rng.normal(size=(int(rng.integers(1, 9)), d)).astype(np.float32)
+        fe.submit("demo", q)
+        if i % 8 == 7:
+            fe.flush()
+    fe.drain()
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="OBS_report", metavar="DIR",
+                    help="directory for OBS_metrics.prom + OBS_trace.jsonl")
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="straggler rounds per sweep cell")
+    ap.add_argument("--queries", type=int, default=64,
+                    help="serve-burst query count")
+    ap.add_argument("--n", type=int, default=192, help="sweep points")
+    ap.add_argument("--nodes", type=int, default=8, help="sweep nodes")
+    ap.add_argument("--k", type=int, default=4, help="sweep clusters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the resilience sweep (serve burst only)")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the serve burst (resilience sweep only)")
+    args = ap.parse_args(argv)
+
+    from repro.obs import default_buffer, default_registry, trace_span
+    from repro.obs.report import summary_lines, write_report
+
+    with trace_span("obs.demo", rounds=args.rounds, queries=args.queries):
+        if not args.no_sweep:
+            _straggler_sweep(args.rounds, args.n, args.nodes, args.k, args.seed)
+        if not args.no_serve:
+            _serve_burst(args.queries, args.seed)
+
+    metrics_path, trace_path = write_report(args.out)
+    for line in summary_lines(default_registry(), default_buffer()):
+        print(line)
+    print(f"obs-report: wrote {os.path.relpath(metrics_path)} "
+          f"+ {os.path.relpath(trace_path)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
