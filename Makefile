@@ -36,8 +36,8 @@ docs-check:  ## markdown link lint + the quickstart/streaming examples must run 
 bench-kernels:  ## compiled kernel microbenchmarks → BENCH_kernels.json
 	$(PY) -m benchmarks.run kernels --emit BENCH_kernels.json
 
-bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor) → BENCH_scenarios.json
-	timeout 300 $(PY) -m benchmarks.run scenarios --emit BENCH_scenarios.json
+bench-scenarios:  ## smoke-sized resilience sweep (scheme × scenario × executor, incl. recorded-trace replay) → BENCH_scenarios.json
+	timeout 300 $(PY) -m benchmarks.run scenarios --trace benchmarks/traces/chronic_8node.jsonl --emit BENCH_scenarios.json
 
 bench-serve:  ## serving-frontend bursts (qps, p50/p99/p999 + paired REPRO_OBS=0 control row, occupancy, cache hit rate) → BENCH_serve.json
 	timeout 300 $(PY) -m benchmarks.run serve --emit BENCH_serve.json

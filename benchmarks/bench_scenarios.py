@@ -14,7 +14,19 @@ combine out).  Derived fields per row:
 * ``patterns`` — distinct alive masks the cell observed;
 * ``patches`` / ``moved_blocks`` / ``uncovered_rounds`` — elastic activity;
 * ``round_p50_us`` / ``ewma_max`` — per-round latency (obs nearest-rank
-  percentile) and the worst per-node straggle EWMA (``session.node_health``).
+  percentile) and the worst per-node straggle EWMA (``session.node_health``);
+* ``ect`` — expected completion time of the cell's FINAL assignment (post
+  elastic patches) under the scenario's own long-run straggle profile
+  (:func:`repro.core.expected_completion_time`; the profile is probed once
+  per scenario over ``PROBE_ROUNDS`` against a uniform reference, so every
+  scheme's column shares one health model);
+* ``ect_vs_fr`` / ``ect_vs_cyclic`` / ``cost_vs_fr`` / ``cost_vs_cyclic`` —
+  ``health``-scheme rows only: ratios against the uniform schemes' rows
+  (``< 1x`` means the optimizer beat blind placement).
+
+The ``health`` scheme feeds the probed profile to the placement optimizer
+(`make_assignment("health", …, health=q)`) — the same signal a live session
+learns through ``node_health()``.
 
 ``--trace PATH`` adds a recorded-trace replay column to the sweep (JSONL
 alive-mask traces from :func:`repro.core.record_trace`).
@@ -34,6 +46,7 @@ import numpy as np
 from repro.core import (
     ElasticPolicy,
     ResilienceSession,
+    expected_completion_time,
     lloyd,
     make_assignment,
     make_scenario,
@@ -43,15 +56,48 @@ from repro.obs import Histogram
 
 from .common import emit
 
-SCHEMES = ("singleton", "cyclic", "fr", "bernoulli")
+# "health" runs LAST so its rows can report deltas vs the fr/cyclic cells.
+SCHEMES = ("singleton", "cyclic", "fr", "bernoulli", "health")
 SCENARIOS = ("iid", "fixed", "adversarial", "deadline")
 
+# Long-run straggle-profile horizon: long enough that persistent-spike
+# scenarios reveal their correlated node sets (a 5-round window can miss
+# them), short enough to stay negligible next to the sweep itself.
+PROBE_ROUNDS = 24
 
-def _assignment(scheme: str, n: int, s: int, seed: int):
+
+def _assignment(scheme: str, n: int, s: int, seed: int, health=None):
+    if scheme == "health":
+        # ell=None: choose_ell picks the replication factor from the
+        # probed health profile (flakier cluster → more replicas).
+        return make_assignment("health", n, s, ell=None, health=health)
     return make_assignment(
         scheme, n, s, ell=2, rng=np.random.default_rng(seed)
         if scheme == "bernoulli" else None,
     )
+
+
+def _probe_health(scen_name: str, n: int, s: int, seed: int, trace_path):
+    """Per-node long-run straggle probability of a scenario: the fraction of
+    the first PROBE_ROUNDS each node misses, replayed against a uniform
+    cyclic reference (scenarios are deterministic per seed, so the sweep
+    sees the same stream).  One probe per scenario — every scheme's ``ect``
+    column is computed under this shared health model."""
+    base = make_assignment("cyclic", n, s, ell=2)
+    scen = _scenario(scen_name, s, base, seed, trace_path)
+    miss = np.zeros(s, dtype=np.float64)
+    for _ in range(PROBE_ROUNDS):
+        miss += ~np.asarray(next(scen).alive, dtype=bool)
+    return miss / PROBE_ROUNDS
+
+
+def _ratio(num: float, den: float) -> str:
+    if not np.isfinite(num) or den <= 0:
+        return "n/a"
+    if not np.isfinite(den):
+        return "0.00x"  # finite vs a divergent reference: unbounded win
+    r = num / den
+    return f"{r:.2f}x" if r >= 0.005 else f"{r:.1e}x"
 
 
 def _scenario(name: str, s: int, assignment, seed: int, trace_path=None):
@@ -89,10 +135,16 @@ def run(
     )
     emit("scen_devices", 0.0, f"devices={jax.device_count()} rounds={rounds}")
     scenarios = SCENARIOS + (("trace",) if trace_path else ())
+    probes = {
+        name: _probe_health(name, n, s, seed + 1, trace_path)
+        for name in scenarios
+    }
+    ect_cells: dict[tuple[str, str], dict[str, tuple[float, float]]] = {}
     for scheme in SCHEMES:
         for scen_name in scenarios:
             for ex in executors:
-                a = _assignment(scheme, n, s, seed)
+                q = probes[scen_name]
+                a = _assignment(scheme, n, s, seed, health=q)
                 scen = _scenario(scen_name, s, a, seed + 1, trace_path)
                 sess = ResilienceSession(
                     a, executor=ex,
@@ -115,16 +167,28 @@ def run(
                 us = (time.perf_counter() - t0) / rounds * 1e6
                 st = sess.stats
                 ewma = sess.node_health()
-                emit(
-                    f"scen_{scheme}_{scen_name}_{ex}",
-                    us,
+                ect = expected_completion_time(sess.assignment, q)
+                cell = ect_cells.setdefault((scen_name, ex), {})
+                cell[scheme] = (ect, cost)
+                derived = (
                     f"cost={cost:.1f} host_solves={st.host_solves} "
                     f"device_solves={st.device_solves} patterns={len(patterns)} "
                     f"patches={st.elastic_patches} moved_blocks={st.moved_node_blocks} "
                     f"uncovered_rounds={st.uncovered_rounds} "
                     f"round_p50_us={round_hist.snapshot().percentile(0.50):.0f} "
-                    f"ewma_max={float(ewma.max()):.2f}",
+                    f"ewma_max={float(ewma.max()):.2f} ect={ect:.4g}"
                 )
+                if scheme == "health":
+                    derived += (
+                        f" ell={a.params['ell']} base={a.params['base']}"
+                    )
+                    for ref in ("fr", "cyclic"):
+                        ref_ect, ref_cost = cell.get(ref, (float("nan"), -1.0))
+                        derived += (
+                            f" ect_vs_{ref}={_ratio(ect, ref_ect)}"
+                            f" cost_vs_{ref}={_ratio(cost, ref_cost)}"
+                        )
+                emit(f"scen_{scheme}_{scen_name}_{ex}", us, derived)
 
 
 def main() -> None:

@@ -67,22 +67,29 @@ def summarize_dryrun(path: str = "results/dryrun.jsonl") -> None:
         )
 
 
+def _take_flag(argv: list[str], flag: str, what: str) -> tuple[list[str], str | None]:
+    if flag not in argv:
+        return argv, None
+    i = argv.index(flag)
+    if i + 1 >= len(argv):
+        sys.exit(f"error: {flag} requires {what}")
+    return argv[:i] + argv[i + 2 :], argv[i + 1]
+
+
 def main() -> None:
     argv = sys.argv[1:]
-    emit_path = None
-    if "--emit" in argv:
-        i = argv.index("--emit")
-        if i + 1 >= len(argv):
-            sys.exit("error: --emit requires an output path (e.g. --emit BENCH_kernels.json)")
-        emit_path = argv[i + 1]
-        argv = argv[:i] + argv[i + 2 :]
+    argv, emit_path = _take_flag(argv, "--emit", "an output path (e.g. --emit BENCH_kernels.json)")
+    argv, trace_path = _take_flag(argv, "--trace", "a JSONL alive-mask trace path")
     names = argv or list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         if n == "dryrun":
             summarize_dryrun()
             continue
-        BENCHES[n]()
+        if n == "scenarios" and trace_path is not None:
+            BENCHES[n](trace_path=trace_path)
+        else:
+            BENCHES[n]()
     if not argv:
         summarize_dryrun()
     if emit_path is not None:

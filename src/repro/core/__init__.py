@@ -14,6 +14,13 @@ from .assignment import (  # noqa: F401
     singleton_assignment,
     theorem6_ell,
 )
+from .placement import (  # noqa: F401
+    PlacementOptimizer,
+    choose_ell,
+    expected_completion_time,
+    health_assignment,
+    round_miss_probability,
+)
 from .recovery import (  # noqa: F401
     RecoveryResult,
     jax_recovery,

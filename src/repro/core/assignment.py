@@ -184,17 +184,20 @@ def make_assignment(
     n: int,
     s: int,
     *,
-    ell: float = 2,
+    ell: Optional[float] = 2,
     rng: Optional[np.random.Generator] = None,
     **kwargs,
 ) -> Assignment:
-    """Factory over the four construction families, keyed by scheme name.
+    """Factory over the five construction families, keyed by scheme name.
 
     ``"bernoulli"`` / ``"cyclic"`` / ``"fractional_repetition"`` (alias
-    ``"fr"``) / ``"singleton"``.  ``ell`` is the per-shard replication
-    (ignored by singleton); remaining kwargs go to the construction.  One
-    shared spelling for benchmarks, sessions, and the streaming layer —
-    instead of each call site keeping its own if/elif ladder.
+    ``"fr"``) / ``"singleton"`` / ``"health"``.  ``ell`` is the per-shard
+    replication (ignored by singleton; ``ell=None`` lets the ``"health"``
+    optimizer choose it); remaining kwargs go to the construction — for
+    ``"health"``, notably ``health=`` (per-node straggle probability, e.g.
+    ``ResilienceSession.node_health()``) and ``capacity=``.  One shared
+    spelling for benchmarks, sessions, and the streaming layer — instead
+    of each call site keeping its own if/elif ladder.
     """
     if scheme == "bernoulli":
         return bernoulli_assignment(n, s, ell=float(ell), rng=rng, **kwargs)
@@ -204,9 +207,15 @@ def make_assignment(
         return fractional_repetition_assignment(n, s, int(ell), **kwargs)
     if scheme == "singleton":
         return singleton_assignment(n, s, **kwargs)
+    if scheme == "health":
+        from .placement import health_assignment  # local import: placement imports us
+
+        return health_assignment(
+            n, s, ell=None if ell is None else int(ell), rng=rng, **kwargs
+        )
     raise ValueError(
         f"unknown assignment scheme {scheme!r}; expected "
-        "bernoulli/cyclic/fractional_repetition/singleton"
+        "bernoulli/cyclic/fractional_repetition/singleton/health"
     )
 
 

@@ -43,6 +43,7 @@ from ..analysis import compiled_path
 from ..obs import StatsView, default_registry, trace_span
 from .assignment import Assignment, cyclic_assignment
 from .executor import Executor, get_executor
+from .placement import PlacementOptimizer
 from .recovery import RecoveryResult, solve_recovery
 
 __all__ = ["ElasticPolicy", "SessionStats", "ResilienceSession"]
@@ -66,14 +67,21 @@ class ElasticPolicy:
     A node that misses ``patience`` consecutive rounds is *persistent*.  A
     shard whose replica count over non-persistent nodes has dropped to
     ``coverage_floor`` or below — because persistent nodes hold its other
-    replicas — is *at risk* and gets ``extra_replicas`` new replicas on the
-    least-loaded healthy nodes.
+    replicas — is *at risk* and gets ``extra_replicas`` new replicas.
+
+    ``health_aware`` orders repair targets by (straggle EWMA, load)
+    lexicographically, so a chronically-flaky node that happens to look
+    healthy *this* round (streak reset by one lucky alive round) is not
+    chosen just because it is empty — the failure mode that made repeated
+    patches ping-pong between a straggler and its evacuation target.
+    ``False`` restores the legacy least-loaded-only selection.
     """
 
     enabled: bool = True
     patience: int = 3
     coverage_floor: int = 1
     extra_replicas: int = 1
+    health_aware: bool = True
 
 
 class SessionStats(StatsView):
@@ -99,6 +107,7 @@ class SessionStats(StatsView):
         "cache_invalidations": "cache entries dropped by patches",
         "rounds": "observe() calls",
         "uncovered_rounds": "rounds where some shard had no alive replica",
+        "placement_reoptimizes": "placement re-optimizations (permanent loss/join)",
     }
 
 
@@ -114,12 +123,19 @@ class ResilienceSession:
         executor: Union[None, str, Executor] = None,
         elastic: Optional[ElasticPolicy] = None,
         device_iters: Optional[int] = None,
+        placement: Union[None, bool, PlacementOptimizer] = None,
     ):
         self.assignment = assignment
         self.recovery_method = recovery_method
         self.executor = get_executor(executor)
         self.elastic = elastic if elastic is not None else ElasticPolicy(enabled=False)
         self.device_iters = device_iters or _device_iters_default()
+        # Health-aware placement policy (opt-in): when set, permanent
+        # membership changes re-optimize the whole placement from the
+        # learned per-node health instead of the legacy cyclic takeover.
+        if placement is True:
+            placement = PlacementOptimizer()
+        self.placement: Optional[PlacementOptimizer] = placement or None
         self._obs_labels = {"session": f"s{next(_SESSION_IDS)}"}
         self.stats = SessionStats(labels=self._obs_labels)
         self.version = 0  # bumped by every elastic patch
@@ -413,17 +429,27 @@ class ResilienceSession:
         "uncovered": int, "persistent": [...]}``.
         """
         alive = np.asarray(getattr(step, "alive", step), dtype=bool)
+        # A permanently-lost node is never alive, whatever the scenario mask
+        # says — and its streak/EWMA/gauge are frozen, not decayed: a dead
+        # node drifting toward "healthy" would poison the placement
+        # optimizer's input (and the repair-target ordering).
+        perm = np.zeros(self.num_nodes, dtype=bool)
+        if self._permanent_dead:
+            perm[list(self._permanent_dead)] = True
+            alive = alive & ~perm
         self.stats.rounds += 1
         self._streak = np.where(alive, 0, self._streak + 1)
+        self._streak[perm] = 0
         a = self.straggle_alpha
-        self._straggle_ewma = (1.0 - a) * self._straggle_ewma + a * (~alive)
+        ewma = (1.0 - a) * self._straggle_ewma + a * (~alive)
+        self._straggle_ewma = np.where(perm, self._straggle_ewma, ewma)
         reg = default_registry()
-        for i, v in enumerate(self._straggle_ewma):
+        for i in np.flatnonzero(~perm):
             reg.gauge(
                 "node_straggle_ewma",
                 labels={**self._obs_labels, "node": str(i)},
                 help="per-node observed-straggle EWMA (0=alive, 1=straggling)",
-            ).set(float(v))
+            ).set(float(self._straggle_ewma[i]))
         A = self.assignment.matrix
         uncovered = int((A[alive].sum(axis=0) == 0).sum()) if alive.any() else self.num_shards
         if uncovered:
@@ -457,18 +483,28 @@ class ResilienceSession:
 
     @compiled_path("session.node_health", kind="host")
     def node_health(self) -> np.ndarray:
-        """(n,) observed-straggle EWMA per node: 0.0 = always alive, 1.0 =
-        always straggling, learned online from :meth:`observe` rounds with
-        smoothing ``straggle_alpha``.  The input signal for the
-        cost-model-driven placement optimizer (ROADMAP): replicate onto
-        nodes with LOW values.  Also exported as the
-        ``node_straggle_ewma{session=…,node=…}`` gauges in obs-report."""
-        return self._straggle_ewma.copy()
+        """Observed-straggle EWMA over the LIVE node set: 0.0 = always
+        alive, 1.0 = always straggling, learned online from :meth:`observe`
+        rounds with smoothing ``straggle_alpha``.  The input signal for the
+        placement optimizer (:mod:`repro.core.placement`): replicate onto
+        nodes with LOW values.  Permanently-lost nodes are excluded — the
+        length tracks the live node set, mirroring the
+        ``node_straggle_ewma{session=…,node=…}`` gauge label set in
+        obs-report (dead nodes' gauges are dropped, not decayed)."""
+        live = np.ones(self.num_nodes, dtype=bool)
+        if self._permanent_dead:
+            live[list(self._permanent_dead)] = False
+        return self._straggle_ewma[live].copy()
 
     # ----------------------------------------------------- elastic patching
 
     def _patch(self, shards: np.ndarray, healthy: np.ndarray, alive: np.ndarray) -> list[int]:
-        """Re-replicate ``shards`` onto the least-loaded healthy nodes."""
+        """Re-replicate ``shards`` onto repair targets picked by
+        (straggle EWMA, load) lexicographic order — long-run-reliable nodes
+        first, load as the tie-break.  ``ElasticPolicy.health_aware=False``
+        restores the legacy least-loaded-only pick, which could target a
+        node that straggled in 9 of the last 10 rounds just because it was
+        empty (and then evacuate it again on the next patch)."""
         mat = self.assignment.matrix.copy()
         loads = mat.sum(axis=1).astype(np.int64)
         moved: set[int] = set()
@@ -479,7 +515,13 @@ class ResilienceSession:
                 for pool in (healthy & alive, healthy):
                     cand = np.flatnonzero(pool & (mat[:, j] == 0))
                     if cand.size:
-                        pick = int(cand[np.argmin(loads[cand])])
+                        if self.elastic.health_aware:
+                            order = np.lexsort(
+                                (loads[cand], self._straggle_ewma[cand])
+                            )
+                            pick = int(cand[order[0]])
+                        else:
+                            pick = int(cand[np.argmin(loads[cand])])
                         mat[pick, j] = 1
                         loads[pick] += 1
                         moved.add(pick)
@@ -546,15 +588,48 @@ class ResilienceSession:
 
     def permanent_join(self, node: int) -> None:
         """A (re)joining node takes over the dead slot's shard set — warm
-        takeover: batch shapes are unchanged, so no reshard is needed."""
-        self._permanent_dead.discard(int(node))
+        takeover: batch shapes are unchanged, so no reshard is needed.
+
+        The node's health state is refreshed (EWMA/streak reset, gauge
+        re-exported at 0): a fresh machine in the slot starts with a clean
+        record, whatever its predecessor's was.  With a placement policy
+        attached, the placement is re-optimized so the rejoined capacity is
+        actually used (replicas move back onto it)."""
+        node = int(node)
+        self._permanent_dead.discard(node)
+        self._streak[node] = 0
+        self._straggle_ewma[node] = 0.0
+        default_registry().gauge(
+            "node_straggle_ewma",
+            labels={**self._obs_labels, "node": str(node)},
+            help="per-node observed-straggle EWMA (0=alive, 1=straggling)",
+        ).set(0.0)
+        if self.placement is not None:
+            self._reoptimize(reason="permanent_join", node=node)
 
     def permanent_loss(self, node: int) -> RecoveryResult:
         """Declare ``node`` permanently lost; re-solve over the survivors
         ONCE (cached — subsequent step weights reuse the entry) and, if the
         loss broke coverage, reshard the survivors.  Returns the recovery
-        result for the post-loss (post-reshard, if any) survivor pattern."""
-        self._permanent_dead.add(int(node))
+        result for the post-loss (post-reshard, if any) survivor pattern.
+
+        The dead node's ``node_straggle_ewma`` gauge is dropped from the
+        registry (it must not sit in obs-report decaying toward healthy)
+        and its EWMA row is pinned at 1.0 — maximally straggling — so any
+        consumer still indexing the full vector sees poison-free state.
+        With a placement policy attached, the placement is re-optimized
+        over the survivors from their learned health (selectively
+        invalidating only the recovery-cache entries the changed rows can
+        affect) instead of waiting for coverage to break.
+        """
+        node = int(node)
+        self._permanent_dead.add(node)
+        self._drop_node_gauge(node)
+        self._straggle_ewma[node] = 1.0
+        self._streak[node] = 0
+        if self.placement is not None:
+            self._reoptimize(reason="permanent_loss", node=node)
+            return self.recovery(self.alive_mask())
         alive = self.alive_mask()
         res = self.recovery(alive)
         if len(res.uncovered) > 0:
@@ -565,33 +640,95 @@ class ResilienceSession:
             res = self.recovery(self.alive_mask())
         return res
 
+    def _drop_node_gauge(self, node: int) -> None:
+        default_registry().remove(
+            "node_straggle_ewma",
+            labels={**self._obs_labels, "node": str(node)},
+        )
+
+    def _reoptimize(self, *, reason: str, node: int) -> list[int]:
+        """Rebuild the placement from live-node health via the attached
+        :class:`repro.core.placement.PlacementOptimizer`; returns the node
+        rows that changed.  Cache invalidation is SELECTIVE — only entries
+        where some changed node is alive can see the new matrix rows
+        (same validity rule as elastic patches) — but the packed/resident
+        arrays are rebuilt wholesale, since a re-optimization typically
+        moves many rows at once."""
+        live = self.alive_mask()
+        with trace_span(
+            "session.placement_reoptimize",
+            reason=reason, node=int(node), **self._obs_labels,
+        ):
+            new = self.placement.optimize(
+                self.num_shards, self.num_nodes, self._straggle_ewma,
+                exclude=~live,
+            )
+            changed = np.flatnonzero(
+                (self.assignment.matrix != new.matrix).any(axis=1)
+            )
+            if changed.size == 0:
+                return []
+            old_m = int(self.assignment.matrix.sum(axis=1).max())
+            self.assignment = dataclasses.replace(
+                new, params={**new.params, "reason": reason}
+            )
+            self._assignment_lineage.add(id(self.assignment))
+            self._invalidate_patterns(changed.tolist())
+            self.stats.placement_reoptimizes += 1
+            self.version += 1
+            self._packed = None
+            self._pack_version = -1
+            self._resident = None
+            self._resident_version = -1
+            self.stats.full_repacks += 1
+            new_m = int(self.assignment.matrix.sum(axis=1).max())
+            for cb in self._patch_listeners:
+                cb(changed.tolist(), old_m, new_m)
+        return changed.tolist()
+
     def _reshard_survivors(self, alive: np.ndarray) -> None:
         """Coverage lost: rebuild the assignment over surviving nodes.
 
         Shard count and node count are preserved (static shapes); survivors
         take over the uncovered shards via a fresh cyclic assignment whose
-        rows for dead nodes are rotated onto the nearest alive row and
-        zeroed (dead slots keep producing weight-0 placeholder data until
-        physically replaced).  Loads are no longer perfectly balanced after
-        takeover; that is the price of elasticity until the next full
-        re-shard.
+        rows for dead nodes are folded onto surviving rows and zeroed (dead
+        slots keep producing weight-0 placeholder data until physically
+        replaced).  The takeover target for each dead row is the survivor
+        with the best (straggle EWMA, load) order — the reshard consults
+        the same health signal as the repair path, instead of a blind
+        rotation onto whatever row index is nearest.  With a placement
+        policy attached, the whole rebuild is delegated to the optimizer.
+        Loads are no longer perfectly balanced after takeover; that is the
+        price of elasticity until the next full re-shard.
         """
-        n_alive = int(np.asarray(alive, dtype=bool).sum())
+        alive = np.asarray(alive, dtype=bool)
+        n_alive = int(alive.sum())
         if n_alive == 0:
             raise ValueError("cannot reshard: no surviving nodes")
-        ell = min(max(2, int(self.assignment.params.get("ell", 2))), n_alive)
-        fresh = cyclic_assignment(self.num_shards, self.num_nodes, int(ell))
-        mat = fresh.matrix.copy()
-        alive_idx = np.flatnonzero(alive)
-        for dead in np.flatnonzero(~np.asarray(alive, dtype=bool)):
-            take = alive_idx[dead % len(alive_idx)]
-            mat[take] |= mat[dead]
-            mat[dead] = 0
         old = self.assignment.matrix
         old_m = int(old.sum(axis=1).max())
-        self.assignment = dataclasses.replace(
-            fresh, matrix=mat, scheme="elastic_cyclic"
-        )
+        if self.placement is not None:
+            fresh = self.placement.optimize(
+                self.num_shards, self.num_nodes, self._straggle_ewma,
+                exclude=~alive,
+            )
+            self.assignment = fresh
+        else:
+            ell = min(max(2, int(self.assignment.params.get("ell", 2))), n_alive)
+            fresh = cyclic_assignment(self.num_shards, self.num_nodes, int(ell))
+            mat = fresh.matrix.copy()
+            alive_idx = np.flatnonzero(alive)
+            for dead in np.flatnonzero(~alive):
+                loads = mat.sum(axis=1).astype(np.int64)
+                order = np.lexsort(
+                    (loads[alive_idx], self._straggle_ewma[alive_idx])
+                )
+                take = alive_idx[order[0]]
+                mat[take] |= mat[dead]
+                mat[dead] = 0
+            self.assignment = dataclasses.replace(
+                fresh, matrix=mat, scheme="elastic_cyclic"
+            )
         self._assignment_lineage.add(id(self.assignment))
         # The whole matrix changed: every cached pattern, pack, and resident
         # placement is stale (unlike _patch's selective invalidation).

@@ -305,6 +305,24 @@ class MetricsRegistry:
             lambda: Histogram(bounds, sample_cap=sample_cap),
         )
 
+    def remove(self, name: str, labels: Optional[dict] = None) -> bool:
+        """Drop one labeled instrument; drop the family once empty.
+
+        Lifecycle hook for label sets that stop existing — e.g. a node's
+        ``node_straggle_ewma`` gauge after ``permanent_loss`` (a dead node's
+        gauge would otherwise sit in every report decaying toward healthy).
+        Returns whether the instrument existed.
+        """
+        key = _label_key(labels)
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                return False
+            existed = fam.children.pop(key, None) is not None
+            if existed and not fam.children:
+                del self._families[name]
+            return existed
+
     # ------------------------------------------------------------ read side
 
     def families(self) -> Dict[str, str]:

@@ -149,6 +149,53 @@ def test_fractional_repetition_delta_is_exactly_zero(s_groups, ell, mult, seed):
         np.testing.assert_allclose(rec.a, 1.0, atol=1e-9)
 
 
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(min_value=2, max_value=8),
+    ell=st.integers(min_value=1, max_value=3),
+    mult=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_health_placement_coverage_and_ect_dominate_uniform(s, ell, mult, seed):
+    """The ``"health"`` optimizer under random health vectors × (n, s, ℓ):
+
+    * Property-1 coverage is a HARD constraint — every shard keeps exactly
+      ℓ distinct replicas (coverage-violation count is zero), at least one
+      on a healthy node whenever one exists, and every coverage-preserving
+      straggler pattern admits a feasible recovery with a ≥ 1.
+    * Expected completion time never exceeds the uniform (cyclic)
+      placement's under the same health model, whenever uniform placement
+      itself satisfies the hard constraint (it sits in the candidate pool;
+      a constraint-violating uniform is infeasible, not a baseline).
+    """
+    from repro.core.placement import expected_completion_time, health_assignment
+
+    n = mult * s
+    ell = min(ell, s)
+    rng = np.random.default_rng(seed)
+    q = rng.uniform(0.0, 1.0, size=s)
+    a = health_assignment(n, s, health=q, ell=ell)
+    assert a.matrix.shape == (s, n)
+    repl = shard_replication(a)
+    assert (repl == ell).all(), "coverage violations must be exactly zero"
+    healthy = q < 0.5  # the REPRO_PLACEMENT_UNHEALTHY default
+    if healthy.any():
+        assert (a.matrix[healthy].sum(axis=0) >= 1).all()
+    for alive in _patterns(s, min(2, s - 1), limit=8, rng=rng):
+        covered = a.matrix[alive].sum(axis=0) > 0
+        rec = lp_recovery(a, alive)
+        assert rec.feasible == bool(covered.all())
+        if rec.feasible:
+            assert rec.a.min() >= 1.0 - 1e-7
+    uniform = make_assignment("cyclic", n, s, ell=ell)
+    if not healthy.any() or (uniform.matrix[healthy].sum(axis=0) >= 1).all():
+        assert expected_completion_time(a, q) <= expected_completion_time(
+            uniform, q
+        ) * (1 + 1e-9) or (
+            np.isinf(expected_completion_time(uniform, q))
+        )
+
+
 @settings(max_examples=6, deadline=None)
 @given(shape=SHAPES, t=st.integers(min_value=1, max_value=2))
 def test_recovered_band_bounds_additive_statistics(shape, t):

@@ -798,7 +798,7 @@ def test_bench_scenarios_reports_zero_host_solves():
         return int(derived.split(key + "=")[1].split()[0])
 
     cells = [r for r in rows if "host_solves=" in r[2]]
-    assert len(cells) == 16  # 4 schemes × 4 scenarios
+    assert len(cells) == 20  # 5 schemes × 4 scenarios
     for name, _us, derived in cells:
         assert field(derived, "host_solves") == 0, (name, derived)
         assert field(derived, "device_solves") > 0, (name, derived)

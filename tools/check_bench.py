@@ -54,6 +54,11 @@ TRACKED = {
         "serve_p99",
         "serve_first_query_warmed",
     ),
+    # The health-placement acceptance row: regressions in the optimizer's
+    # candidate sweep show up here first (it runs inside the cell's rounds).
+    "BENCH_scenarios.json": (
+        "scen_health_deadline_local",
+    ),
 }
 
 
